@@ -1,0 +1,40 @@
+"""Shared helpers for the paper-table benchmarks."""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+
+from repro.core import PAPER, run_scenario
+
+
+@dataclass
+class Row:
+    name: str
+    us_per_call: float
+    derived: str
+
+    def csv(self) -> str:
+        return f"{self.name},{self.us_per_call:.1f},{self.derived}"
+
+
+def timed(fn):
+    t0 = time.time()
+    out = fn()
+    return out, (time.time() - t0) * 1e6
+
+
+def epoch_profile(backend: str, *, epochs: int = 3, n_jobs: int = 4, **kw):
+    """(startup_s, epoch1_s, steady_s) mean across jobs."""
+    res = run_scenario(backend, epochs=epochs, n_jobs=n_jobs, **kw)
+    su = sum(j.startup_s for j in res.jobs) / len(res.jobs)
+    e = res.mean_epoch_times
+    return res, su, e[0], e[-1]
+
+
+def project_total(su: float, e1: float, steady: float, n_epochs: int) -> float:
+    return su + e1 + (n_epochs - 1) * steady
+
+
+def fps(epoch_s: float) -> float:
+    return PAPER.dataset_items / epoch_s

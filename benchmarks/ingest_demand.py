@@ -1,0 +1,38 @@
+"""Per-arch data-ingest demand: which LM is the 'AlexNet' of the pool?
+
+Hoard's benefit scales with bytes-ingested per accelerator-second.  For each
+assigned architecture we compute the train_4k input demand (tokens/step x
+4 bytes) against the roofline step time from the dry-run — the MB/s the data
+plane must sustain per 256-chip pod.  This grounds the paper's technique in
+the assigned architectures (DESIGN.md §4).
+"""
+
+from __future__ import annotations
+
+from repro.configs import ARCHS, TRAIN_4K
+
+from .common import Row
+from .roofline_table import load_cells
+
+
+def ingest_rows():
+    rows, lines = [], ["Input-pipeline demand per arch (train_4k, one 256-chip pod)"]
+    cells = {d["arch"]: d for d in load_cells("16x16") if d["shape"] == "train_4k"}
+    tokens = TRAIN_4K.global_batch * TRAIN_4K.seq_len
+    step_bytes = tokens * 4
+    lines.append(f"  batch bytes/step = {step_bytes/1e6:.1f} MB (tokens+labels int32)")
+    ranked = []
+    for arch in sorted(ARCHS):
+        d = cells.get(arch)
+        if d is None:
+            continue
+        step_s = d["step_time_s"]
+        demand = step_bytes / step_s
+        ranked.append((demand, arch, step_s))
+    ranked.sort(reverse=True)
+    for demand, arch, step_s in ranked:
+        lines.append(f"  {arch:24s} step={step_s:7.3f}s  ingest={demand/1e6:8.1f} MB/s")
+        rows.append(Row(f"ingest/{arch}", 0.0, f"MBps={demand/1e6:.1f};step_s={step_s:.3f}"))
+    if ranked:
+        lines.append(f"  -> most data-hungry: {ranked[0][1]} (the pool's AlexNet analogue)")
+    return rows, lines

@@ -1,0 +1,55 @@
+"""Roofline table: read dry-run JSONs, print the 3-term analysis per cell."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from .common import Row
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun")
+
+
+def load_cells(mesh: str | None = "16x16", include_overrides: bool = False):
+    cells = []
+    for path in sorted(glob.glob(os.path.join(RESULTS_DIR, "*.json"))):
+        base = os.path.basename(path)
+        if not include_overrides and base.count("__") > 2:
+            continue
+        with open(path) as fh:
+            d = json.load(fh)
+        if d.get("status") != "ok":
+            continue
+        if mesh and d.get("mesh") != mesh:
+            continue
+        cells.append(d)
+    return cells
+
+
+def roofline_rows():
+    rows, lines = [], []
+    cells = load_cells("16x16")
+    if not cells:
+        lines.append("  (no dry-run results found — run `python -m repro.launch.dryrun --all`)")
+        return rows, lines
+    header = (
+        f"  {'arch':24s} {'shape':12s} {'compute_s':>10s} {'memory_s':>10s} "
+        f"{'collect_s':>10s} {'bound':>10s} {'useful%':>8s} {'MFU%':>6s}"
+    )
+    lines.append("Roofline terms per (arch x shape), 16x16 mesh, TPU v5e constants")
+    lines.append(header)
+    for d in sorted(cells, key=lambda x: (x["arch"], x["shape"])):
+        lines.append(
+            f"  {d['arch']:24s} {d['shape']:12s} {d['compute_s']:10.4f} "
+            f"{d['memory_s']:10.4f} {d['collective_s']:10.4f} {d['bottleneck']:>10s} "
+            f"{d['useful_flops_fraction']*100:7.1f}% {d['mfu']*100:5.1f}%"
+        )
+        rows.append(
+            Row(
+                f"roofline/{d['arch']}/{d['shape']}",
+                d.get("compile_s", 0) * 1e6,
+                f"bound={d['bottleneck']};step_s={d['step_time_s']:.4f};mfu={d['mfu']*100:.2f}%",
+            )
+        )
+    return rows, lines

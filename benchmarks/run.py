@@ -1,0 +1,60 @@
+"""Benchmark harness: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV followed by formatted tables.
+Run: ``PYTHONPATH=src python -m benchmarks.run [--quick]``
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true", help="skip the slowest sweeps")
+    ap.add_argument("--only", default=None, help="comma-separated benchmark names")
+    args = ap.parse_args()
+
+    from . import paper_tables
+    from .ingest_demand import ingest_rows
+    from .roofline_table import roofline_rows
+
+    benches = [
+        ("table1", paper_tables.table1_backends),
+        ("fig3", paper_tables.fig3_epochs),
+        ("table3", paper_tables.table3_projection),
+        ("fig4", paper_tables.fig4_mdr),
+        ("fig5", paper_tables.fig5_bandwidth),
+        ("table4", paper_tables.table4_network),
+        ("table5", paper_tables.table5_uplink),
+        ("coplacement", paper_tables.misplaced_job_scenario),
+        ("roofline", roofline_rows),
+        ("ingest", ingest_rows),
+    ]
+    if args.quick:
+        benches = [b for b in benches if b[0] in ("table3", "table5", "roofline", "ingest")]
+    if args.only:
+        keep = set(args.only.split(","))
+        benches = [b for b in benches if b[0] in keep]
+
+    all_rows, all_lines = [], []
+    for name, fn in benches:
+        try:
+            rows, lines = fn()
+            all_rows.extend(rows)
+            all_lines.extend(lines + [""])
+        except Exception as err:  # keep the harness running; report at end
+            all_lines.append(f"[{name}] FAILED: {err}")
+            print(f"[{name}] FAILED: {err}", file=sys.stderr)
+
+    print("name,us_per_call,derived")
+    for row in all_rows:
+        print(row.csv())
+    print()
+    for line in all_lines:
+        print(line)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,55 @@
+"""Hyper-parameter sweep: Hoard's killer use-case (paper Section 1-2).
+
+Ten sequential jobs share one dataset.  Without Hoard each job re-streams
+the data from NFS; with Hoard the first job fills the stripes and the other
+nine ride warm cache — dataset lifecycle is decoupled from job lifecycle
+(Requirement 2).
+
+    PYTHONPATH=src python examples/hyperparam_sweep.py
+"""
+
+from repro.core import (
+    CacheManager,
+    DatasetSpec,
+    HoardBackend,
+    HoardLoader,
+    PAPER,
+    RemoteBackend,
+    TrainingJob,
+    build_cluster,
+)
+
+N_JOBS = 10
+EPOCHS = 2       # short think-time runs, the developer workflow the paper targets
+
+
+def sweep(backend_name: str) -> float:
+    clock, topo, store, cache, engine = build_cluster()
+    spec = DatasetSpec("imagenet", "nfs://store/imagenet", PAPER.dataset_items, int(PAPER.item_bytes))
+    cache.register(spec)
+    if backend_name == "hoard":
+        cache.admit("imagenet", topo.nodes[:4])
+
+    total = 0.0
+    # jobs run sequentially: trial i+1 starts after trial i (think-time loop)
+    for trial in range(N_JOBS):
+        node = topo.nodes[trial % 4]
+        if backend_name == "hoard":
+            be = HoardBackend(clock, topo, node, PAPER, cache=cache, dataset_id="imagenet")
+        else:
+            be = RemoteBackend(clock, topo, node, PAPER)
+        loader = HoardLoader(be, PAPER, epochs=EPOCHS, seed=trial)
+        job = TrainingJob(f"trial{trial}", clock, loader, PAPER)
+        done = job.start()
+        clock.run()
+        total = clock.now
+    return total
+
+
+rem_total = sweep("rem")
+hoard_total = sweep("hoard")
+print(f"10-trial sweep, {EPOCHS} epochs each")
+print(f"  REM   : {rem_total/3600:6.2f} h  (every trial streams from NFS)")
+print(f"  Hoard : {hoard_total/3600:6.2f} h  (trial 0 fills, 9 trials ride warm stripes)")
+print(f"  sweep speedup: {rem_total/hoard_total:.2f}x  — vs 0.93x for a single 2-epoch run: "
+      f"the one-off fill amortises across trials (Requirement 2)")

@@ -1,0 +1,14 @@
+"""Serve a small model with batched requests over a Hoard-cached prompt set.
+
+    PYTHONPATH=src python examples/serve_cached.py
+"""
+
+import sys
+
+sys.argv = [sys.argv[0]]
+
+from repro.launch.serve import main as serve_main
+
+if __name__ == "__main__":
+    serve_main(["--arch", "qwen1.5-0.5b", "--requests", "4",
+                "--prompt-len", "16", "--new-tokens", "8"])

@@ -1,0 +1,8 @@
+"""Hoard-on-TPU: distributed data caching + multi-pod JAX training framework.
+
+Reproduction and extension of Pinto et al., "Hoard: A Distributed Data
+Caching System to Accelerate Deep Learning Training on the Cloud" (2018).
+See DESIGN.md for the system map and EXPERIMENTS.md for results.
+"""
+
+__version__ = "1.0.0"

@@ -1,0 +1,61 @@
+"""Architecture registry: ``--arch <id>`` resolves here."""
+
+from . import (
+    deepseek_v2_lite_16b,
+    hymba_1_5b,
+    internvl2_2b,
+    mixtral_8x7b,
+    phi3_medium_14b,
+    phi4_mini_3_8b,
+    qwen3_4b,
+    qwen15_0_5b,
+    whisper_large_v3,
+    xlstm_1_3b,
+)
+from .base import (
+    ALL_SHAPES,
+    DECODE_32K,
+    LONG_500K,
+    PREFILL_32K,
+    SHAPES,
+    TRAIN_4K,
+    EncDecConfig,
+    HybridConfig,
+    MLAConfig,
+    ModelConfig,
+    MoEConfig,
+    ShapeConfig,
+    SSMConfig,
+    VLMConfig,
+    shape_applicable,
+)
+
+ARCHS: dict[str, ModelConfig] = {
+    m.CONFIG.arch: m.CONFIG
+    for m in (
+        whisper_large_v3,
+        deepseek_v2_lite_16b,
+        mixtral_8x7b,
+        qwen3_4b,
+        phi4_mini_3_8b,
+        qwen15_0_5b,
+        phi3_medium_14b,
+        xlstm_1_3b,
+        internvl2_2b,
+        hymba_1_5b,
+    )
+}
+
+
+def get_arch(name: str) -> ModelConfig:
+    if name not in ARCHS:
+        raise KeyError(f"unknown arch {name!r}; choose from {sorted(ARCHS)}")
+    return ARCHS[name]
+
+
+__all__ = [
+    "ALL_SHAPES", "ARCHS", "DECODE_32K", "EncDecConfig", "HybridConfig",
+    "LONG_500K", "MLAConfig", "ModelConfig", "MoEConfig", "PREFILL_32K",
+    "SHAPES", "SSMConfig", "ShapeConfig", "TRAIN_4K", "VLMConfig",
+    "get_arch", "shape_applicable",
+]

@@ -1,0 +1,41 @@
+"""Hoard core: distributed, dataset-granular data cache for DL training.
+
+Public API surface (see DESIGN.md for the paper mapping):
+
+* ``SimClock`` / ``Resource``             — discrete-event fabric
+* ``Topology`` / ``TopologyConfig``        — nodes, racks, links, remote store
+* ``StripeStore``                          — chunked, striped, replicated store
+* ``CacheManager`` / ``DatasetSpec``       — dataset-granularity lifecycle
+* ``PlacementEngine`` / ``JobSpec``        — data/compute co-scheduling
+* ``HoardLoader`` + backends               — transparent iterators (R4)
+* ``run_scenario`` / ``build_cluster``     — one-call experiment harness
+"""
+
+from .cache import CacheEntry, CacheFullError, CacheManager, CacheState, DatasetSpec, EvictionPolicy
+from .calibration import PAPER, WorkloadCalibration
+from .cluster import ScenarioResult, build_cluster, run_scenario
+from .loader import (
+    HoardBackend,
+    HoardLoader,
+    JobResult,
+    LocalCopyBackend,
+    RemoteBackend,
+    TrainingJob,
+)
+from .metrics import ClusterMetrics, JobMetrics
+from .placement import JobSpec, Placement, PlacementEngine
+from .simclock import AllOf, Event, Resource, SimClock
+from .stripestore import ChunkCorruption, StripeError, StripeManifest, StripeStore
+from .tiers import LRUCache, LRUStackModel, PagePool, buffer_cache_items
+from .topology import Node, Topology, TopologyConfig
+
+__all__ = [
+    "AllOf", "CacheEntry", "CacheFullError", "CacheManager", "CacheState",
+    "ChunkCorruption", "ClusterMetrics", "DatasetSpec", "Event", "EvictionPolicy",
+    "HoardBackend", "HoardLoader", "JobMetrics", "JobResult", "JobSpec",
+    "LRUCache", "LRUStackModel", "LocalCopyBackend", "Node", "PAPER", "PagePool",
+    "Placement", "PlacementEngine", "RemoteBackend", "Resource", "ScenarioResult",
+    "SimClock", "StripeError", "StripeManifest", "StripeStore", "Topology",
+    "TopologyConfig", "TrainingJob", "WorkloadCalibration", "buffer_cache_items",
+    "build_cluster", "run_scenario",
+]

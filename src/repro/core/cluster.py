@@ -1,0 +1,158 @@
+"""Scenario harness: build the paper's cluster and run REM/NVMe/Hoard jobs.
+
+One call — ``run_scenario(backend="hoard", epochs=2, ...)`` — constructs the
+4-node/4-GPU-per-node cluster of Table 2 (or any other topology), registers
+the ImageNet-like dataset, places jobs with the placement engine, runs the
+discrete-event simulation and returns per-job results + metrics.  Every
+benchmark module is a thin wrapper over this.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional
+
+from .cache import CacheManager, DatasetSpec, EvictionPolicy
+from .calibration import PAPER, WorkloadCalibration
+from .loader import (
+    HoardBackend,
+    HoardLoader,
+    JobResult,
+    LocalCopyBackend,
+    RemoteBackend,
+    TrainingJob,
+)
+from .metrics import ClusterMetrics
+from .placement import JobSpec, PlacementEngine
+from .simclock import SimClock
+from .stripestore import StripeStore
+from .topology import Topology, TopologyConfig
+
+
+@dataclass
+class ScenarioResult:
+    backend: str
+    jobs: list[JobResult]
+    metrics: ClusterMetrics
+    sim_seconds: float
+    cal: WorkloadCalibration = field(default_factory=lambda: PAPER)
+
+    @property
+    def mean_epoch_times(self) -> list[float]:
+        """Element-wise mean epoch time across jobs."""
+        n_ep = min(len(j.epoch_times) for j in self.jobs)
+        return [
+            sum(j.epoch_times[e] for j in self.jobs) / len(self.jobs) for e in range(n_ep)
+        ]
+
+    @property
+    def total_time(self) -> float:
+        return max(j.total_s for j in self.jobs)
+
+
+def build_cluster(
+    topo_cfg: Optional[TopologyConfig] = None,
+    *,
+    cal: WorkloadCalibration = PAPER,
+    capacity_per_node: float = 1e12,
+    policy: EvictionPolicy = EvictionPolicy.LRU,
+    replication: int = 1,
+):
+    clock = SimClock()
+    topo = Topology(topo_cfg or TopologyConfig(), clock)
+    store = StripeStore(topo)
+    cache = CacheManager(
+        topo,
+        store,
+        clock,
+        capacity_per_node=capacity_per_node,
+        policy=policy,
+        fill_bw=cal.fill_bw,
+        replication=replication,
+    )
+    engine = PlacementEngine(topo, cache)
+    return clock, topo, store, cache, engine
+
+
+def run_scenario(
+    backend: str,
+    *,
+    epochs: int = 2,
+    n_jobs: int = 4,
+    topo_cfg: Optional[TopologyConfig] = None,
+    cal: WorkloadCalibration = PAPER,
+    mdr: Optional[float] = None,
+    remote_bw_scale: float = 1.0,
+    physical_copy: bool = False,
+    cache_nodes: Optional[list[int]] = None,
+    job_nodes: Optional[list[int]] = None,
+    prefetch: bool = False,
+    seed: int = 0,
+) -> ScenarioResult:
+    """Run ``n_jobs`` identical jobs over the chosen data path.
+
+    ``remote_bw_scale`` scales the NFS stream+NIC rates (Figure 5's x-axis);
+    ``mdr`` sets the memory/dataset ratio (Figure 4); ``cache_nodes`` /
+    ``job_nodes`` override placement (Section 4.5 misplacement study);
+    ``prefetch`` pre-populates the cache before the jobs start (the paper's
+    asynchronous pre-fetch usage model).
+    """
+    topo_cfg = topo_cfg or TopologyConfig()
+    if remote_bw_scale != 1.0:
+        # Figure 5: the tc tool throttles the NFS NIC; per-stream service and
+        # the AFM fill path (remote-fed) scale with it, local paths do not
+        from dataclasses import replace
+
+        cal = replace(
+            cal,
+            rem_miss_bw=cal.rem_miss_bw * remote_bw_scale,
+            fill_bw=cal.fill_bw * remote_bw_scale,
+        )
+        topo_cfg = replace(topo_cfg, remote_nic_bw=topo_cfg.remote_nic_bw * remote_bw_scale)
+    clock, topo, store, cache, engine = build_cluster(topo_cfg, cal=cal)
+    metrics = ClusterMetrics()
+
+    spec = DatasetSpec("imagenet", "nfs://store/imagenet", cal.dataset_items, int(cal.item_bytes))
+    cache.register(spec)
+
+    # ---- placement: paper default = 1 job per node, dataset striped on all
+    if cache_nodes is None:
+        cache_nodes = [n.node_id for n in topo.nodes[:4]] if backend == "hoard" else []
+    cnodes = [topo.node(i) for i in cache_nodes] if cache_nodes else []
+
+    if backend == "hoard":
+        cache.admit("imagenet", cnodes)
+        if prefetch:
+            done = cache.prefetch("imagenet", cnodes)
+
+    placements = []
+    for j in range(n_jobs):
+        jspec = JobSpec(f"job{j}", "imagenet", n_nodes=1, gpus_per_node=4)
+        if job_nodes is not None:
+            node = topo.node(job_nodes[j % len(job_nodes)])
+            engine.inventory.take(node, 4)
+            placements.append((jspec, node))
+        else:
+            pl = engine.place(jspec)
+            placements.append((jspec, pl.compute_nodes[0]))
+
+    jobs = []
+    for jspec, node in placements:
+        jm = metrics.job(jspec.job_id)
+        if backend == "rem":
+            be = RemoteBackend(clock, topo, node, cal, mdr=mdr, metrics=jm)
+        elif backend == "nvme":
+            be = LocalCopyBackend(clock, topo, node, cal, mdr=mdr, physical_copy=physical_copy, metrics=jm)
+        elif backend == "hoard":
+            be = HoardBackend(clock, topo, node, cal, cache=cache, dataset_id="imagenet", mdr=mdr, metrics=jm)
+        else:
+            raise ValueError(f"unknown backend {backend!r}")
+        loader = HoardLoader(be, cal, epochs=epochs, seed=seed + hash(jspec.job_id) % 1000)
+        jobs.append(TrainingJob(jspec.job_id, clock, loader, cal, metrics=jm))
+
+    done_events = [job.start() for job in jobs]
+    clock.run()
+    results = [ev.value for ev in done_events]
+    if any(r is None for r in results):
+        raise RuntimeError("simulation ended before all jobs finished")
+    return ScenarioResult(backend, results, metrics, clock.now, cal)

@@ -1,0 +1,400 @@
+"""Transparent data loaders + the simulated training-job process.
+
+Requirement 4 adapted to JAX: the paper exposes cached data through POSIX so
+frameworks need no changes; here the training loop consumes a plain iterator
+(`HoardLoader`) and cannot tell whether a batch came from the remote store,
+a peer's stripe, local NVMe or RAM.  Three interchangeable backends implement
+the paper's three data paths:
+
+* ``RemoteBackend``  (REM)   — NFS streams + host buffer cache,
+* ``LocalCopyBackend`` (NVMe) — pre-staged local copy + buffer cache,
+* ``HoardBackend``            — stripe store + pagepool + AFM-style fill.
+
+Every backend classifies each step's items into service classes and books the
+bytes as flows on the simulated fabric; `TrainingJob` overlaps IO for step
+``i+1`` with compute for step ``i`` (double buffering), which is how real
+input pipelines behave and why throughput is ``max(io, compute)``-bound.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Iterator, Optional
+
+import numpy as np
+
+from .cache import CacheManager, CacheState
+from .calibration import PAPER, WorkloadCalibration
+from .metrics import JobMetrics
+from .simclock import Event, Resource, SimClock
+from .stripestore import StripeStore
+from .tiers import LRUStackModel, PagePool, buffer_cache_items
+from .topology import Node, Topology
+
+
+@dataclass
+class EpochPlan:
+    """Deterministic per-epoch permutation of item indices."""
+
+    n_items: int
+    seed: int
+
+    def order(self, epoch: int) -> np.ndarray:
+        rng = np.random.default_rng((self.seed, epoch))
+        return rng.permutation(self.n_items)
+
+
+class _Backend:
+    """Common plumbing: per-job client-service resources."""
+
+    name = "base"
+
+    def __init__(self, clock: SimClock, topology: Topology, node: Node, cal: WorkloadCalibration):
+        self.clock = clock
+        self.topology = topology
+        self.node = node
+        self.cal = cal
+        self.ram = Resource(f"{node.name}.ram_client", cal.ram_bw)
+
+    def epoch_start(self, epoch: int) -> None:  # pragma: no cover - default
+        pass
+
+    def startup(self) -> float:
+        """Seconds of one-off staging before step 0 (e.g. NVMe copy)."""
+        return 0.0
+
+    def batch_io(self, item_ids: np.ndarray, epoch: int, positions: np.ndarray) -> Event:
+        raise NotImplementedError
+
+
+class RemoteBackend(_Backend):
+    """REM: every miss streams from the central NFS server."""
+
+    name = "REM"
+
+    def __init__(self, clock, topology, node, cal, *, mdr: Optional[float] = None, metrics: Optional[JobMetrics] = None):
+        super().__init__(clock, topology, node, cal)
+        self.stream = Resource(f"{node.name}.nfs_stream", cal.rem_miss_bw)
+        mdr = cal.default_mdr if mdr is None else mdr
+        self.buffer_cache = LRUStackModel(cal.dataset_items, buffer_cache_items(mdr, cal.dataset_items))
+        self.metrics = metrics
+
+    def batch_io(self, item_ids, epoch, positions) -> Event:
+        hits = self.buffer_cache.access_epoch_batch(item_ids, epoch, positions)
+        miss_bytes = float((~hits).sum()) * self.cal.item_bytes
+        hit_bytes = float(hits.sum()) * self.cal.item_bytes
+        flows = []
+        if miss_bytes:
+            path = [self.stream, *self.topology.path_from_remote(self.node)]
+            flows.append(self.clock.transfer(path, miss_bytes))
+            if self.metrics:
+                self.metrics.count("remote_bytes", miss_bytes)
+        if hit_bytes:
+            flows.append(self.clock.transfer([self.ram], hit_bytes))
+            if self.metrics:
+                self.metrics.count("ram_bytes", hit_bytes)
+        return self.clock.all_of(flows)
+
+
+class LocalCopyBackend(_Backend):
+    """NVMe: dataset copied to the node's local disks before the job."""
+
+    name = "NVMe"
+
+    def __init__(
+        self,
+        clock,
+        topology,
+        node,
+        cal,
+        *,
+        mdr: Optional[float] = None,
+        physical_copy: bool = False,
+        metrics: Optional[JobMetrics] = None,
+    ):
+        super().__init__(clock, topology, node, cal)
+        mdr = cal.default_mdr if mdr is None else mdr
+        self.buffer_cache = LRUStackModel(cal.dataset_items, buffer_cache_items(mdr, cal.dataset_items))
+        self.physical_copy = physical_copy
+        self.metrics = metrics
+
+    def startup(self) -> float:
+        if not self.physical_copy:
+            # the paper's Table-3 projection amortises the copy (see
+            # calibration.py); keep their constant for the faithful repro
+            return self.cal.nvme_prestage_s
+        # honest mode: stream the dataset from NFS through the fabric now
+        return -1.0  # sentinel: TrainingJob books a real flow instead
+
+    def startup_flow(self) -> Event:
+        path = [*self.topology.path_from_remote(self.node), self.node.nvme]
+        if self.metrics:
+            self.metrics.count("remote_bytes", self.cal.dataset_bytes)
+        return self.clock.transfer(path, self.cal.dataset_bytes)
+
+    def batch_io(self, item_ids, epoch, positions) -> Event:
+        hits = self.buffer_cache.access_epoch_batch(item_ids, epoch, positions)
+        miss_bytes = float((~hits).sum()) * self.cal.item_bytes
+        hit_bytes = float(hits.sum()) * self.cal.item_bytes
+        flows = []
+        if miss_bytes:
+            flows.append(self.clock.transfer([self.node.nvme], miss_bytes))
+            if self.metrics:
+                self.metrics.count("nvme_bytes", miss_bytes)
+        if hit_bytes:
+            flows.append(self.clock.transfer([self.ram], hit_bytes))
+            if self.metrics:
+                self.metrics.count("ram_bytes", hit_bytes)
+        return self.clock.all_of(flows)
+
+
+class HoardBackend(_Backend):
+    """Hoard: stripe-store reads + pagepool; AFM fill path on miss.
+
+    First access to an uncached item takes the *fill* path: fetch from the
+    remote store, write back to the owning stripe node, serve the reader —
+    all booked at the calibrated AFM miss-service rate.  Subsequent accesses
+    are stripe reads or pagepool hits.
+
+    The GPFS client is modelled as a per-job *service-time* resource: every
+    read (hit or miss — pagepool hits are served inside the client daemon)
+    costs ``1/stripe_rpc_bw`` seconds/byte of client CPU, and stripe misses
+    additionally cost ``1/stripe_move_bw``.  We book those seconds as a flow
+    on a 1-unit/s resource so queueing across pipelined steps is preserved.
+    This is why Hoard is almost flat in MDR (paper Fig. 4): the client CPU,
+    not the data path, is the steady-state bottleneck.
+    """
+
+    name = "Hoard"
+
+    def __init__(
+        self,
+        clock,
+        topology,
+        node,
+        cal,
+        *,
+        cache: CacheManager,
+        dataset_id: str,
+        mdr: Optional[float] = None,
+        metrics: Optional[JobMetrics] = None,
+    ):
+        super().__init__(clock, topology, node, cal)
+        self.cache = cache
+        self.dataset_id = dataset_id
+        self.client = Resource(f"{node.name}.gpfs_client", 1.0)  # seconds/second
+        self.fill_client = Resource(f"{node.name}.afm_fill", cal.fill_bw)
+        mdr = cal.default_mdr if mdr is None else mdr
+        n = self.cache.entries[dataset_id].spec.n_items
+        self.pagepool = PagePool(n, buffer_cache_items(mdr, n))
+        # item-granular residency: AFM fetches exactly what a miss touches;
+        # striping (chunk) granularity is a separate, placement-only concept
+        self._resident = np.zeros(n, dtype=bool)
+        self.metrics = metrics
+
+    def _manifest(self):
+        return self.cache.store.manifests[self.dataset_id]
+
+    def epoch_start(self, epoch: int) -> None:
+        entry = self.cache.entries[self.dataset_id]
+        if entry.state is CacheState.CACHED:
+            self._resident[:] = True
+        self.cache.touch(self.dataset_id)
+
+    def batch_io(self, item_ids, epoch, positions) -> Event:
+        man = self._manifest()
+        self.cache.touch(self.dataset_id)
+        hits = self.pagepool.access_epoch_batch(item_ids, epoch, positions)
+        resident = self._resident[item_ids]
+
+        fill_mask = (~resident) & (~hits)
+        stripe_mask = resident & (~hits)
+        flows = []
+
+        fill_bytes = float(fill_mask.sum()) * self.cal.item_bytes
+        if fill_bytes:
+            # AFM miss path: remote stream -> stripe write-back -> serve.
+            # The calibrated fill-client service rate dominates; remote NIC
+            # and target NVMe are also booked so cluster-level contention
+            # (many filling jobs) appears mechanistically.
+            path = [self.fill_client, *self.topology.path_from_remote(self.node)]
+            flows.append(self.clock.transfer(path, fill_bytes))
+            self._resident[item_ids[fill_mask]] = True
+            if self.metrics:
+                self.metrics.count("remote_bytes", fill_bytes)
+                self.metrics.count("fill_bytes", fill_bytes)
+
+        stripe_total = float(stripe_mask.sum()) * self.cal.item_bytes
+        if stripe_mask.any():
+            src_nodes = self.cache.store.locate_batch(self.dataset_id, item_ids[stripe_mask], self.node)
+            # network + source-disk flows per stripe source; rarely binding
+            # at paper scale but mechanistically present (misplacement and
+            # many-jobs-per-cache-node scenarios make them bind)
+            for src_id in np.unique(src_nodes):
+                nbytes = float((src_nodes == src_id).sum()) * self.cal.item_bytes
+                src = self.topology.node(int(src_id))
+                path = [src.nvme, *self.topology.path(src, self.node)]
+                flows.append(self.clock.transfer(path, nbytes))
+                if self.metrics:
+                    if src.node_id == self.node.node_id:
+                        self.metrics.count("local_stripe_bytes", nbytes)
+                    else:
+                        self.metrics.count("peer_bytes", nbytes)
+                        self.metrics.count_link(src.node_id, self.node.node_id, nbytes)
+            if self.metrics:
+                self.metrics.count("stripe_bytes", stripe_total)
+
+        # GPFS-client CPU: RPC cost on every byte served from the stripes or
+        # the pagepool, plus data-move cost on stripe misses (see class doc)
+        served_bytes = stripe_total + float(hits.sum()) * self.cal.item_bytes
+        client_seconds = (
+            served_bytes / self.cal.stripe_rpc_bw + stripe_total / self.cal.stripe_move_bw
+        )
+        if client_seconds > 0:
+            flows.append(self.clock.transfer([self.client], client_seconds))
+        if self.metrics and hits.any():
+            self.metrics.count("ram_bytes", float(hits.sum()) * self.cal.item_bytes)
+
+        if self._resident.all():
+            entry = self.cache.entries[self.dataset_id]
+            if entry.state is CacheState.FILLING:
+                self.cache.mark_filled(self.dataset_id)
+        return self.clock.all_of(flows)
+
+
+class HoardLoader:
+    """The transparent iterator: ``for batch_meta in loader`` per epoch."""
+
+    def __init__(
+        self,
+        backend: _Backend,
+        cal: WorkloadCalibration,
+        *,
+        epochs: int,
+        seed: int = 0,
+        batch_items: Optional[int] = None,
+    ):
+        self.backend = backend
+        self.cal = cal
+        self.epochs = epochs
+        self.batch = batch_items or cal.batch_items
+        self.plan = EpochPlan(cal.dataset_items, seed)
+
+    def steps_per_epoch(self) -> int:
+        return (self.cal.dataset_items + self.batch - 1) // self.batch
+
+    def epoch_batches(self, epoch: int) -> Iterator[tuple[np.ndarray, np.ndarray]]:
+        order = self.plan.order(epoch)
+        positions = np.arange(len(order))
+        for s in range(0, len(order), self.batch):
+            yield order[s : s + self.batch], positions[s : s + self.batch]
+
+
+@dataclass
+class JobResult:
+    job_id: str
+    epoch_times: list[float] = field(default_factory=list)
+    step_times: list[float] = field(default_factory=list)
+    startup_s: float = 0.0
+
+    @property
+    def total_s(self) -> float:
+        return self.startup_s + sum(self.epoch_times)
+
+    def fps_timeline(self, batch_items: int) -> np.ndarray:
+        dt = np.asarray(self.step_times)
+        return batch_items / np.maximum(dt, 1e-9)
+
+
+class TrainingJob:
+    """Simulated DL job: prefetch-pipelined IO + compute, per-step metrics.
+
+    ``prefetch_depth`` batches are kept in flight ahead of compute (tf.data
+    style).  Depth 1 is classic double-buffering; deeper queues bank IO slack
+    from cache-hit-rich phases of an epoch against the all-miss tail, which is
+    what real input pipelines do and what the paper's steady rates reflect.
+    """
+
+    def __init__(
+        self,
+        job_id: str,
+        clock: SimClock,
+        loader: HoardLoader,
+        cal: WorkloadCalibration,
+        *,
+        metrics: Optional[JobMetrics] = None,
+        prefetch_depth: int = 16,
+    ):
+        self.job_id = job_id
+        self.clock = clock
+        self.loader = loader
+        self.cal = cal
+        self.metrics = metrics
+        self.prefetch_depth = max(1, int(prefetch_depth))
+        self.result = JobResult(job_id)
+
+    def start(self) -> Event:
+        return self.clock.process(self._run())
+
+    def _run(self):
+        clock = self.clock
+        backend = self.loader.backend
+        compute_s = self.cal.compute_time_per_step()
+
+        t0 = clock.now
+        startup = backend.startup()
+        if startup == -1.0:  # physical staging flow
+            yield backend.startup_flow()
+        elif startup > 0:
+            yield clock.sleep(startup)
+        self.result.startup_s = clock.now - t0
+
+        def batch_stream():
+            for epoch in range(self.loader.epochs):
+                for ids, pos in self.loader.epoch_batches(epoch):
+                    yield epoch, ids, pos
+
+        stream = batch_stream()
+        issued_epoch = -1
+
+        def issue(item):
+            nonlocal issued_epoch
+            epoch, ids, pos = item
+            if epoch != issued_epoch:
+                backend.epoch_start(epoch)
+                issued_epoch = epoch
+            return epoch, backend.batch_io(ids, epoch, pos)
+
+        from collections import deque
+
+        pending: deque = deque()
+
+        def top_up():
+            while len(pending) < self.prefetch_depth:
+                item = next(stream, None)
+                if item is None:
+                    return
+                pending.append(issue(item))
+
+        top_up()
+        if not pending:
+            return self.result
+        epoch_t0 = clock.now
+        last_step_end = clock.now
+        while pending:
+            cur_epoch, io = pending.popleft()
+            yield io                      # this step's data is ready
+            top_up()                      # keep the pipeline full
+            yield clock.sleep(compute_s)  # accelerator consumes the batch
+            now = clock.now
+            self.result.step_times.append(now - last_step_end)
+            last_step_end = now
+            if self.metrics:
+                self.metrics.record_step(now, self.cal.batch_items)
+            epoch_over = not pending or pending[0][0] != cur_epoch
+            if epoch_over:
+                self.result.epoch_times.append(now - epoch_t0)
+                epoch_t0 = now
+                if self.metrics:
+                    self.metrics.mark_epoch(now)
+        return self.result

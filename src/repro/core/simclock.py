@@ -1,0 +1,294 @@
+"""Discrete-event simulation kernel with max-min-fair flow bandwidth sharing.
+
+This is the time engine behind every Hoard performance number.  Cache *logic*
+(striping, manifests, eviction, placement) runs for real; only elapsed time is
+simulated, by booking every byte movement as a *flow* across a path of shared
+:class:`Resource` objects (NIC, NVMe queue, TOR uplink, per-client service
+capacity).  Concurrent flows share each resource max-min fairly; rates are
+re-solved on every flow arrival/departure (fluid-flow DES, the standard model
+for TCP-fair networks).
+
+Processes are Python generators that ``yield`` requests:
+
+    yield clock.sleep(dt)            # advance this process by dt seconds
+    yield clock.transfer(path, n)    # move n bytes across resources in path
+    yield event                      # wait for an Event set by someone else
+
+Determinism: all continuations are deferred through the event heap; equal-time
+events fire in schedule order.
+"""
+
+from __future__ import annotations
+
+import heapq
+import itertools
+import math
+from dataclasses import dataclass, field
+from typing import Callable, Generator, Iterable, Optional
+
+
+class Resource:
+    """A shared capacity (bytes/second).  Flows crossing it split it fairly."""
+
+    __slots__ = ("name", "bw", "flows", "busy_bytes")
+
+    def __init__(self, name: str, bw: float):
+        if bw <= 0:
+            raise ValueError(f"resource {name!r} needs positive bandwidth, got {bw}")
+        self.name = name
+        self.bw = float(bw)
+        self.flows: set["Flow"] = set()
+        self.busy_bytes = 0.0  # total bytes that crossed this resource
+
+    def utilization(self, horizon: float) -> float:
+        """Fraction of capacity used over ``horizon`` seconds."""
+        if horizon <= 0:
+            return 0.0
+        return min(1.0, (self.busy_bytes / self.bw) / horizon)
+
+    def __repr__(self) -> str:  # pragma: no cover - debug aid
+        return f"Resource({self.name}, {self.bw/1e6:.1f} MB/s, {len(self.flows)} flows)"
+
+
+class Flow:
+    __slots__ = ("fid", "path", "size", "remaining", "rate", "event", "settled_at")
+
+    def __init__(self, fid: int, path: tuple[Resource, ...], nbytes: float, event: "Event", now: float):
+        self.fid = fid
+        self.path = path
+        self.size = float(nbytes)
+        self.remaining = float(nbytes)
+        self.rate = 0.0
+        self.event = event
+        self.settled_at = now  # sim-time up to which `remaining` is accurate
+
+    @property
+    def negligible(self) -> bool:
+        # float-rounding residue (relative to the flow's own size) counts as
+        # complete; flows are unit-agnostic (bytes, service-seconds, ...)
+        return self.remaining <= self.size * 1e-9
+
+
+class Event:
+    """One-shot event; processes can wait on it, values pass through."""
+
+    __slots__ = ("clock", "fired", "value", "_callbacks")
+
+    def __init__(self, clock: "SimClock"):
+        self.clock = clock
+        self.fired = False
+        self.value = None
+        self._callbacks: list[Callable] = []
+
+    def set(self, value=None) -> None:
+        if self.fired:
+            return
+        self.fired = True
+        self.value = value
+        callbacks, self._callbacks = self._callbacks, []
+        for cb in callbacks:
+            cb(value)
+
+    def on_fire(self, cb: Callable) -> None:
+        """``cb(value)`` runs when the event fires (immediately if it has)."""
+        if self.fired:
+            cb(self.value)
+        else:
+            self._callbacks.append(cb)
+
+
+class AllOf:
+    """Join on several events; ``.event`` fires when all inputs have fired."""
+
+    def __init__(self, clock: "SimClock", events: Iterable[Event]):
+        self.event = Event(clock)
+        events = list(events)
+        self._pending = len(events)
+        if self._pending == 0:
+            self.event.set()
+        for ev in events:
+            ev.on_fire(self._one)
+
+    def _one(self, _value) -> None:
+        self._pending -= 1
+        if self._pending == 0:
+            self.event.set()
+
+
+@dataclass(order=True)
+class _Scheduled:
+    when: float
+    seq: int
+    fn: Callable = field(compare=False)
+
+
+class SimClock:
+    """Deterministic event loop + fluid max-min-fair flow network."""
+
+    def __init__(self):
+        self.now = 0.0
+        self._heap: list[_Scheduled] = []
+        self._seq = itertools.count()
+        self._fid = itertools.count()
+        self._flows: set[Flow] = set()
+        self._completion_handle: Optional[_Scheduled] = None
+
+    # ------------------------------------------------------------------ events
+    def event(self) -> Event:
+        return Event(self)
+
+    def all_of(self, events: Iterable[Event]) -> Event:
+        return AllOf(self, events).event
+
+    def schedule(self, delay: float, fn: Callable) -> _Scheduled:
+        if delay < 0:
+            raise ValueError(f"negative delay {delay}")
+        item = _Scheduled(self.now + delay, next(self._seq), fn)
+        heapq.heappush(self._heap, item)
+        return item
+
+    # --------------------------------------------------------------- processes
+    def process(self, gen: Generator) -> Event:
+        """Run a generator as a process; returns an Event fired on return."""
+        done = Event(self)
+
+        def step(send_value=None):
+            try:
+                request = gen.send(send_value)
+            except StopIteration as stop:
+                done.set(getattr(stop, "value", None))
+                return
+            if isinstance(request, Event):
+                # defer through the heap so Event.set never reenters the
+                # flow-network solver mid-update
+                request.on_fire(lambda v: self.schedule(0.0, lambda: step(v)))
+            elif isinstance(request, tuple) and request and request[0] == "sleep":
+                self.schedule(request[1], lambda: step(None))
+            else:
+                raise TypeError(f"process yielded unsupported request {request!r}")
+
+        self.schedule(0.0, step)
+        return done
+
+    # ------------------------------------------------------------------- sleep
+    @staticmethod
+    def sleep(dt: float):
+        return ("sleep", float(dt))
+
+    # ---------------------------------------------------------------- transfer
+    def transfer(self, path: Iterable[Resource], nbytes: float) -> Event:
+        """Start a flow of ``nbytes`` across ``path``; returns completion Event."""
+        ev = Event(self)
+        nbytes = float(nbytes)
+        path = tuple(path)
+        if nbytes <= 0 or not path:
+            ev.set()
+            return ev
+        self._settle()
+        flow = Flow(next(self._fid), path, nbytes, ev, self.now)
+        self._flows.add(flow)
+        for res in path:
+            res.flows.add(flow)
+        self._reallocate()
+        return ev
+
+    # ------------------------------------------------------- max-min fairness
+    def _settle(self) -> None:
+        """Advance every in-flight flow's `remaining` to the current time."""
+        for flow in self._flows:
+            moved = flow.rate * (self.now - flow.settled_at)
+            if moved > 0:
+                flow.remaining = max(0.0, flow.remaining - moved)
+                for res in flow.path:
+                    res.busy_bytes += moved
+            flow.settled_at = self.now
+
+    def _reallocate(self) -> None:
+        """Max-min fair (water-filling) rates; schedule next completion."""
+        done = [f for f in self._flows if f.negligible]
+        for f in done:
+            self._finish(f)
+        flows = list(self._flows)
+        if not flows:
+            self._cancel_completion()
+            return
+
+        unassigned = set(flows)
+        capacity: dict[Resource, float] = {}
+        load: dict[Resource, int] = {}
+        for f in flows:
+            for res in f.path:
+                capacity[res] = res.bw
+                load[res] = load.get(res, 0) + 1
+
+        while unassigned:
+            share, bottleneck = None, None
+            for res, cap in capacity.items():
+                if load.get(res, 0) <= 0:
+                    continue
+                s = cap / load[res]
+                if share is None or s < share:
+                    share, bottleneck = s, res
+            if bottleneck is None:  # pragma: no cover - all resources drained
+                for f in unassigned:
+                    f.rate = 0.0
+                break
+            settled = [f for f in unassigned if bottleneck in f.path]
+            for f in settled:
+                f.rate = share
+                unassigned.discard(f)
+                for res in f.path:
+                    capacity[res] -= share
+                    load[res] -= 1
+            capacity.pop(bottleneck, None)
+            load.pop(bottleneck, None)
+
+        self._schedule_next_completion()
+
+    def _schedule_next_completion(self) -> None:
+        self._cancel_completion()
+        best_dt = math.inf
+        for f in self._flows:
+            if f.rate > 0:
+                best_dt = min(best_dt, f.remaining / f.rate)
+        if math.isinf(best_dt):
+            return
+        # remember which flows this completion is *for*, so float rounding in
+        # settle() can never leave them fractionally unfinished
+        self._completing = [
+            f for f in self._flows if f.rate > 0 and f.remaining / f.rate <= best_dt * (1 + 1e-12)
+        ]
+        self._completion_handle = self.schedule(best_dt, self._on_completion)
+
+    def _cancel_completion(self) -> None:
+        if self._completion_handle is not None:
+            self._completion_handle.fn = lambda: None  # tombstone
+            self._completion_handle = None
+
+    def _on_completion(self) -> None:
+        self._completion_handle = None
+        self._settle()
+        for f in getattr(self, "_completing", ()):  # see _schedule_next_completion
+            f.remaining = 0.0
+        self._completing = []
+        self._reallocate()
+
+    def _finish(self, flow: Flow) -> None:
+        self._flows.discard(flow)
+        for res in flow.path:
+            res.flows.discard(flow)
+        # defer the event so completions never reenter the solver
+        self.schedule(0.0, flow.event.set)
+
+    # --------------------------------------------------------------------- run
+    def run(self, until: Optional[float] = None) -> float:
+        """Drain the event heap (optionally stopping at ``until`` seconds)."""
+        while self._heap:
+            item = self._heap[0]
+            if until is not None and item.when > until - 1e-12:
+                self.now = until
+                return self.now
+            heapq.heappop(self._heap)
+            self.now = max(self.now, item.when)
+            item.fn()
+        return self.now

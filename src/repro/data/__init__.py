@@ -1,0 +1,5 @@
+"""Data pipeline: Hoard-cached token corpora for the training loop."""
+
+from .tokens import TokenDatasetSpec, TokenLoader, materialize_token_dataset
+
+__all__ = ["TokenDatasetSpec", "TokenLoader", "materialize_token_dataset"]

@@ -1,0 +1,19 @@
+"""Pallas TPU kernels (pl.pallas_call + BlockSpec VMEM tiling).
+
+Each kernel ships with a pure-jnp oracle in ``ref.py`` and a dispatching
+wrapper in ``ops.py`` (interpret mode off-TPU).  Validated by shape/dtype
+sweeps in ``tests/test_kernels.py``.
+"""
+
+from . import ops, ref
+from .decode_attention import decode_attention
+from .flash_attention import flash_attention
+from .mlstm_scan import mlstm_scan
+from .rmsnorm import rmsnorm
+from .ssd_scan import ssd_scan_kernel
+from .swiglu import swiglu_mlp
+
+__all__ = [
+    "decode_attention", "flash_attention", "mlstm_scan", "ops", "ref",
+    "rmsnorm", "ssd_scan_kernel", "swiglu_mlp",
+]

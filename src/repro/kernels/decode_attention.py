@@ -1,0 +1,113 @@
+"""Pallas TPU flash-decoding: single-token attention against a long KV cache.
+
+Decode attention is memory-bound: the whole KV cache streams through once per
+token.  The kernel splits the cache sequence into blocks (the sequential grid
+axis), keeps the G grouped-query rows for one kv head as the (tiny) q tile,
+and carries (m, l, acc) in VMEM scratch — identical math to flash attention
+with Sq = G.  ``valid_len`` arrives via scalar prefetch (SMEM) so one compiled
+kernel serves every cache fill level; blocks entirely past valid_len skip
+their dot products via ``pl.when``.
+
+The sequence-sharded (flash-decoding) serve path in ``repro.serve`` mirrors
+this exact split across chips and merges partials with the same (m, l, acc)
+algebra.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_NEG_INF = -1e30
+
+
+def _decode_kernel(
+    valid_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
+    *, block_k, n_kv, window,
+):
+    ki = pl.program_id(1)
+    valid = valid_ref[0]
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, _NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    @pl.when(ki * block_k < valid)
+    def _work():
+        q = q_ref[0].astype(jnp.float32)                   # (G, hd)
+        k = k_ref[0].astype(jnp.float32)                   # (bk, hd)
+        v = v_ref[0].astype(jnp.float32)
+        s = lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) * (q.shape[-1] ** -0.5)                          # (G, bk)
+        kv_pos = ki * block_k + lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        mask = kv_pos < valid
+        if window > 0:
+            mask &= kv_pos > valid - 1 - window
+        s = jnp.where(mask, s, _NEG_INF)
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, s.max(-1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * corr + p.sum(-1)
+        m_scr[...] = m_new
+        acc_scr[...] = acc_scr[...] * corr[:, None] + lax.dot_general(
+            p.astype(v.dtype), v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+
+    @pl.when(ki == n_kv - 1)
+    def _finalize():
+        l = l_scr[...]
+        o_ref[0] = (acc_scr[...] / jnp.where(l == 0, 1.0, l)[:, None]).astype(o_ref.dtype)
+
+
+def decode_attention(q, k_cache, v_cache, valid_len, *, window=0, block_k=512, interpret=False):
+    """q: (B,Hq,1,hd); caches: (B,Hkv,S,hd); valid_len: scalar int."""
+    B, Hq, _, hd = q.shape
+    _, Hkv, S, _ = k_cache.shape
+    G = Hq // Hkv
+    bk = min(block_k, S)
+    S_pad = math.ceil(S / bk) * bk
+    if S_pad != S:
+        k_cache = jnp.pad(k_cache, ((0, 0), (0, 0), (0, S_pad - S), (0, 0)))
+        v_cache = jnp.pad(v_cache, ((0, 0), (0, 0), (0, S_pad - S), (0, 0)))
+    n_kv = S_pad // bk
+
+    qf = q.reshape(B * Hkv, G, hd)
+    kf = k_cache.reshape(B * Hkv, S_pad, hd)
+    vf = v_cache.reshape(B * Hkv, S_pad, hd)
+    valid = jnp.asarray([valid_len], jnp.int32)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B * Hkv, n_kv),
+        in_specs=[
+            pl.BlockSpec((1, G, hd), lambda bh, ki, *_: (bh, 0, 0)),
+            pl.BlockSpec((1, bk, hd), lambda bh, ki, *_: (bh, ki, 0)),
+            pl.BlockSpec((1, bk, hd), lambda bh, ki, *_: (bh, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, G, hd), lambda bh, ki, *_: (bh, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G, hd), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        functools.partial(_decode_kernel, block_k=bk, n_kv=n_kv, window=window),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B * Hkv, G, hd), v_cache.dtype),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(valid, qf, kf, vf)
+    return out.reshape(B, Hq, 1, hd)

@@ -1,0 +1,128 @@
+"""Pallas TPU flash attention: blockwise online-softmax, causal/GQA/SWA.
+
+TPU adaptation notes (vs. the CUDA flash-attention the literature assumes):
+
+* Tiling targets VMEM + the 128x128 MXU: block_q x head_dim and
+  block_k x head_dim tiles stream HBM->VMEM via BlockSpecs; all matmuls are
+  MXU-shaped (block sizes are multiples of 128 at full size).
+* The kv axis is the innermost *sequential* grid dimension
+  (``dimension_semantics=("parallel","parallel","arbitrary")``): the running
+  (m, l, acc) state lives in VMEM scratch that persists across kv steps —
+  the TPU idiom replacing CUDA's per-CTA shared-memory accumulators.
+* GQA: the grid runs over query heads; K/V BlockSpec index_maps divide the
+  head index by the group size, so K/V tiles are fetched once per kv head
+  without materialising repeats.
+* Causal/SWA masking is positional (block index arithmetic + iota), matching
+  ``repro.models.layers.blockwise_attention`` exactly.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_NEG_INF = -1e30
+
+
+def _flash_kernel(
+    q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
+    *, block_q, block_k, n_kv, causal, window, kv_len,
+):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, _NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0].astype(jnp.float32)                       # (bq, hd)
+    k = k_ref[0].astype(jnp.float32)                       # (bk, hd)
+    v = v_ref[0].astype(jnp.float32)
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * (q.shape[-1] ** -0.5)                              # (bq, bk)
+
+    q_pos = qi * block_q + lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+    kv_pos = ki * block_k + lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+    mask = kv_pos < kv_len
+    if causal:
+        mask &= kv_pos <= q_pos
+    if window > 0:
+        mask &= kv_pos > q_pos - window
+    s = jnp.where(mask, s, _NEG_INF)
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, s.max(-1))
+    p = jnp.exp(s - m_new[:, None])
+    corr = jnp.exp(m_prev - m_new)
+    l_scr[...] = l_scr[...] * corr + p.sum(-1)
+    m_scr[...] = m_new
+    acc_scr[...] = acc_scr[...] * corr[:, None] + jax.lax.dot_general(
+        p.astype(v.dtype), v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+
+    @pl.when(ki == n_kv - 1)
+    def _finalize():
+        l = l_scr[...]
+        o_ref[0] = (acc_scr[...] / jnp.where(l == 0, 1.0, l)[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention(
+    q, k, v, *, causal=True, window=0, block_q=128, block_k=128, interpret=False
+):
+    """q: (B,Hq,Sq,hd); k,v: (B,Hkv,Skv,hd) -> (B,Hq,Sq,hd)."""
+    B, Hq, Sq, hd = q.shape
+    _, Hkv, Skv, _ = k.shape
+    G = Hq // Hkv
+    assert Hq == G * Hkv
+
+    bq = min(block_q, Sq)
+    bk = min(block_k, Skv)
+    Sq_pad = math.ceil(Sq / bq) * bq
+    Skv_pad = math.ceil(Skv / bk) * bk
+    if Sq_pad != Sq:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, Sq_pad - Sq), (0, 0)))
+    if Skv_pad != Skv:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, Skv_pad - Skv), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, Skv_pad - Skv), (0, 0)))
+
+    qf = q.reshape(B * Hq, Sq_pad, hd)
+    kf = k.reshape(B * Hkv, Skv_pad, hd)
+    vf = v.reshape(B * Hkv, Skv_pad, hd)
+    n_q = Sq_pad // bq
+    n_kv = Skv_pad // bk
+
+    kernel = functools.partial(
+        _flash_kernel,
+        block_q=bq, block_k=bk, n_kv=n_kv,
+        causal=causal, window=window, kv_len=Skv,
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=(B * Hq, n_q, n_kv),
+        in_specs=[
+            pl.BlockSpec((1, bq, hd), lambda bh, qi, ki: (bh, qi, 0)),
+            pl.BlockSpec((1, bk, hd), lambda bh, qi, ki, G=G: (bh // G, ki, 0)),
+            pl.BlockSpec((1, bk, hd), lambda bh, qi, ki, G=G: (bh // G, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, hd), lambda bh, qi, ki: (bh, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * Hq, Sq_pad, hd), v.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq, hd), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(qf, kf, vf)
+    return out.reshape(B, Hq, Sq_pad, hd)[:, :, :Sq]

@@ -1,0 +1,108 @@
+"""Pallas TPU chunked mLSTM: the xLSTM matrix-memory recurrence.
+
+Chunk-parallel form (derivation in ``repro.models.xlstm``): within an L-step
+chunk all pair weights form a lower-triangular (L, L) decay matrix computed
+from cumulative log-forget-gates; the cross-chunk recurrence carries
+(C: dqk x dv, n: dqk, m: 1) in VMEM scratch across the sequential chunk axis.
+MXU does the (L,L)x(L,dv) and rank-L state updates; the VPU handles the
+log-space gate algebra.  This replaces the CUDA step-parallel kernel of the
+paper's ecosystem with a TPU-native chunkwise layout.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_NEG = -1e30
+
+
+def _mlstm_kernel(q_ref, k_ref, v_ref, i_ref, f_ref, o_ref, C_scr, n_scr, m_scr, *, L, n_chunks):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        C_scr[...] = jnp.zeros_like(C_scr)
+        n_scr[...] = jnp.zeros_like(n_scr)
+        m_scr[...] = jnp.full_like(m_scr, _NEG)
+
+    q = q_ref[0].astype(jnp.float32) * (q_ref.shape[-1] ** -0.5)   # (L, dqk)
+    k = k_ref[0].astype(jnp.float32)
+    v = v_ref[0].astype(jnp.float32)                                # (L, dv)
+    ii = i_ref[0].astype(jnp.float32)                               # (L,)
+    ff = f_ref[0].astype(jnp.float32)
+
+    b = jnp.cumsum(ff)                                              # (L,)
+    r = lax.cummax(ii - b, axis=0)
+    m_prev = m_scr[0]
+    m_t = b + jnp.maximum(m_prev, r)                                # (L,)
+
+    logD = b[:, None] - b[None, :] + ii[None, :] - m_t[:, None]
+    t_idx = lax.broadcasted_iota(jnp.int32, (L, L), 0)
+    s_idx = lax.broadcasted_iota(jnp.int32, (L, L), 1)
+    D = jnp.where(s_idx <= t_idx, jnp.exp(logD), 0.0)               # (L, L)
+
+    scores = lax.dot_general(q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32) * D
+    inter_scale = jnp.exp(b + m_prev - m_t)                         # (L,)
+    C = C_scr[...]
+    n = n_scr[...]
+    num = lax.dot(scores, v, preferred_element_type=jnp.float32)
+    num = num + inter_scale[:, None] * lax.dot(q, C, preferred_element_type=jnp.float32)
+    den = scores.sum(-1) + inter_scale * (q @ n)
+    h = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_t))[:, None]
+    o_ref[0] = h.astype(o_ref.dtype)
+
+    m_next = b[-1] + jnp.maximum(m_prev, r[-1])
+    w_state = jnp.exp(b[-1] - b + ii - m_next)                      # (L,)
+    decay = jnp.exp(b[-1] + m_prev - m_next)
+    kw = k * w_state[:, None]
+    C_scr[...] = decay * C + lax.dot_general(
+        kw, v, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    n_scr[...] = decay * n + kw.sum(0)
+    m_scr[0] = m_next
+
+
+def mlstm_scan(q, k, v, i_raw, log_f, *, chunk=128, interpret=False):
+    """q,k: (B,H,S,dqk); v: (B,H,S,dv); i_raw/log_f: (B,H,S) -> h (B,H,S,dv)."""
+    B, H, S, dqk = q.shape
+    dv = v.shape[-1]
+    L = min(chunk, S)
+    assert S % L == 0, (S, L)
+    nc = S // L
+
+    qf = q.reshape(B * H, S, dqk)
+    kf = k.reshape(B * H, S, dqk)
+    vf = v.reshape(B * H, S, dv)
+    iflat = i_raw.reshape(B * H, S)
+    fflat = log_f.reshape(B * H, S)
+
+    out = pl.pallas_call(
+        functools.partial(_mlstm_kernel, L=L, n_chunks=nc),
+        grid=(B * H, nc),
+        in_specs=[
+            pl.BlockSpec((1, L, dqk), lambda bh, ci: (bh, ci, 0)),
+            pl.BlockSpec((1, L, dqk), lambda bh, ci: (bh, ci, 0)),
+            pl.BlockSpec((1, L, dv), lambda bh, ci: (bh, ci, 0)),
+            pl.BlockSpec((1, L), lambda bh, ci: (bh, ci)),
+            pl.BlockSpec((1, L), lambda bh, ci: (bh, ci)),
+        ],
+        out_specs=pl.BlockSpec((1, L, dv), lambda bh, ci: (bh, ci, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * H, S, dv), v.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((dqk, dv), jnp.float32),
+            pltpu.VMEM((dqk,), jnp.float32),
+            pltpu.VMEM((1,), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(qf, kf, vf, iflat, fflat)
+    return out.reshape(B, H, S, dv)

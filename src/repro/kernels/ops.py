@@ -1,0 +1,48 @@
+"""jit'd dispatch wrappers: Pallas on TPU, interpret mode elsewhere.
+
+``use_pallas=True`` model configs route the hot ops here; on a CPU host the
+kernels execute via ``interpret=True`` (Python interpretation of the kernel
+body — correctness identical, used by the allclose test sweeps).  The pure
+XLA fallbacks live in ``repro.models.layers`` / ``repro.kernels.ref``.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from .decode_attention import decode_attention as _decode_attention
+from .flash_attention import flash_attention as _flash_attention
+from .mlstm_scan import mlstm_scan as _mlstm_scan
+from .rmsnorm import rmsnorm as _rmsnorm
+from .swiglu import swiglu_mlp as _swiglu_mlp
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def flash_attention(q, k, v, **kw):
+    kw.setdefault("interpret", not _on_tpu())
+    return _flash_attention(q, k, v, **kw)
+
+
+def decode_attention(q, k_cache, v_cache, valid_len, **kw):
+    kw.setdefault("interpret", not _on_tpu())
+    return _decode_attention(q, k_cache, v_cache, valid_len, **kw)
+
+
+def rmsnorm(x, gamma, **kw):
+    kw.setdefault("interpret", not _on_tpu())
+    return _rmsnorm(x, gamma, **kw)
+
+
+def swiglu_mlp(x, w_gate, w_up, w_down, **kw):
+    kw.setdefault("interpret", not _on_tpu())
+    return _swiglu_mlp(x, w_gate, w_up, w_down, **kw)
+
+
+def mlstm_scan(q, k, v, i_raw, log_f, **kw):
+    kw.setdefault("interpret", not _on_tpu())
+    return _mlstm_scan(q, k, v, i_raw, log_f, **kw)

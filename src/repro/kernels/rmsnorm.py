@@ -1,0 +1,49 @@
+"""Pallas TPU fused RMSNorm: one HBM round-trip per row block.
+
+Unfused XLA does (read x, mean-square reduce, read x again, scale, write);
+the kernel streams a (block_rows, D) tile into VMEM once, reduces in fp32 on
+the VPU, scales and writes — memory-bound op at exactly 2x D bytes/row.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _rmsnorm_kernel(x_ref, g_ref, o_ref, *, eps):
+    x = x_ref[...].astype(jnp.float32)
+    ms = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(ms + eps)
+    o_ref[...] = (y * g_ref[...].astype(jnp.float32)).astype(o_ref.dtype)
+
+
+def rmsnorm(x, gamma, *, eps=1e-5, block_rows=256, interpret=False):
+    """x: (..., D); gamma: (D,)."""
+    orig_shape = x.shape
+    D = x.shape[-1]
+    xf = x.reshape(-1, D)
+    N = xf.shape[0]
+    br = min(block_rows, N)
+    N_pad = math.ceil(N / br) * br
+    if N_pad != N:
+        xf = jnp.pad(xf, ((0, N_pad - N), (0, 0)))
+
+    out = pl.pallas_call(
+        functools.partial(_rmsnorm_kernel, eps=eps),
+        grid=(N_pad // br,),
+        in_specs=[
+            pl.BlockSpec((br, D), lambda i: (i, 0)),
+            pl.BlockSpec((D,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((br, D), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((N_pad, D), x.dtype),
+        compiler_params=pltpu.CompilerParams(dimension_semantics=("parallel",)),
+        interpret=interpret,
+    )(xf, gamma)
+    return out[:N].reshape(orig_shape)

@@ -1,0 +1,93 @@
+"""Pallas TPU SSD (Mamba-2) chunked selective scan.
+
+The kernel form of ``repro.models.hymba.ssd_scan`` — the §Perf cell-B
+optimization hardened into a TPU kernel.  Per grid step (one chunk of one
+(batch, head)):
+
+  * intra-chunk: a lower-triangular (L, L) decay matrix D from the cumulative
+    log-decays gates the (C B^T) Gram matrix, then one MXU matmul against X;
+  * inter-chunk: the carried state h (chd, N) is read through C with per-step
+    decay, and updated with the decayed rank-L outer products.
+
+State (chd x N fp32) lives in VMEM scratch across the sequential chunk axis,
+exactly like flash attention's (m, l, acc).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(lf_ref, b_ref, x_ref, c_ref, y_ref, h_scr, *, L, n_chunks):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        h_scr[...] = jnp.zeros_like(h_scr)
+
+    lf = lf_ref[0].astype(jnp.float32)                     # (L,)
+    b = b_ref[0].astype(jnp.float32)                       # (L, N)
+    x = x_ref[0].astype(jnp.float32)                       # (L, chd)
+    c = c_ref[0].astype(jnp.float32)                       # (L, N)
+
+    cum = jnp.cumsum(lf)                                   # (L,)
+    t_idx = lax.broadcasted_iota(jnp.int32, (L, L), 0)
+    s_idx = lax.broadcasted_iota(jnp.int32, (L, L), 1)
+    D = jnp.where(s_idx <= t_idx, jnp.exp(cum[:, None] - cum[None, :]), 0.0)
+
+    M = lax.dot_general(c, b, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32)
+    y = lax.dot((M * D).astype(x.dtype), x, preferred_element_type=jnp.float32)   # (L, chd)
+
+    h = h_scr[...]                                         # (chd, N)
+    # inter-chunk read: y += (c_t * exp(cum_t)) h^T
+    c_in = c * jnp.exp(cum)[:, None]
+    y = y + lax.dot_general(c_in, h, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32)
+    y_ref[0] = y.astype(y_ref.dtype)
+
+    # state update: h' = exp(cum_L) h + sum_s exp(cum_L - cum_s) x_s b_s^T
+    w = jnp.exp(cum[-1] - cum)                             # (L,)
+    xw = x * w[:, None]
+    h_scr[...] = jnp.exp(cum[-1]) * h + lax.dot_general(
+        xw, b, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+
+
+def ssd_scan_kernel(lf, b_in, x_in, c_out, *, chunk=128, interpret=False):
+    """lf: (B,S,H); b_in/c_out: (B,S,H,N); x_in: (B,S,H,chd) -> y (B,S,H,chd)."""
+    B, S, H = lf.shape
+    N = b_in.shape[-1]
+    chd = x_in.shape[-1]
+    L = min(chunk, S)
+    assert S % L == 0, (S, L)
+    nc = S // L
+
+    # (B,S,H,*) -> (B*H, S, *)
+    lff = lf.transpose(0, 2, 1).reshape(B * H, S)
+    bf = b_in.transpose(0, 2, 1, 3).reshape(B * H, S, N)
+    xf = x_in.transpose(0, 2, 1, 3).reshape(B * H, S, chd)
+    cf = c_out.transpose(0, 2, 1, 3).reshape(B * H, S, N)
+
+    out = pl.pallas_call(
+        functools.partial(_ssd_kernel, L=L, n_chunks=nc),
+        grid=(B * H, nc),
+        in_specs=[
+            pl.BlockSpec((1, L), lambda bh, ci: (bh, ci)),
+            pl.BlockSpec((1, L, N), lambda bh, ci: (bh, ci, 0)),
+            pl.BlockSpec((1, L, chd), lambda bh, ci: (bh, ci, 0)),
+            pl.BlockSpec((1, L, N), lambda bh, ci: (bh, ci, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, L, chd), lambda bh, ci: (bh, ci, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * H, S, chd), x_in.dtype),
+        scratch_shapes=[pltpu.VMEM((chd, N), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(lff, bf, xf, cf)
+    return out.reshape(B, H, S, chd).transpose(0, 2, 1, 3)

@@ -1,0 +1,23 @@
+"""Production meshes: 16x16 single pod, 2x16x16 multi-pod.
+
+``make_production_mesh`` is a FUNCTION (never a module-level constant) so
+importing this module touches no jax device state — the dry-run must set
+``XLA_FLAGS`` before the first jax call.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_test_mesh(data: int = 2, model: int = 2, pods: int = 0):
+    """Small meshes for CPU tests (requires enough host devices)."""
+    if pods:
+        return jax.make_mesh((pods, data, model), ("pod", "data", "model"))
+    return jax.make_mesh((data, model), ("data", "model"))

@@ -1,0 +1,13 @@
+"""Model zoo: 10 assigned architectures over 4 family implementations."""
+
+from . import params
+from .encdec import EncDecLM
+from .hymba import Hymba
+from .lm import DecoderLM
+from .registry import build_model, input_specs, step_fn
+from .xlstm import XLSTM
+
+__all__ = [
+    "DecoderLM", "EncDecLM", "Hymba", "XLSTM",
+    "build_model", "input_specs", "params", "step_fn",
+]

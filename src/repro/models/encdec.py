@@ -1,0 +1,241 @@
+"""Whisper-style encoder-decoder backbone (conv frontend stubbed).
+
+Inputs arrive as precomputed frame embeddings (B, S_enc, D) — the assignment
+stubs the mel/conv frontend.  Encoder: non-causal self-attention + GELU MLP,
+LayerNorm, sinusoidal positions.  Decoder: causal self-attention + cross
+attention to encoder states, learned positions, tied unembedding.  Decode
+caches: per-layer self KV + static cross KV computed once from the encoder.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from ..configs.base import ModelConfig
+from . import params as PM
+from .layers import (
+    blockwise_attention,
+    decode_attention,
+    gelu_mlp,
+    layer_norm,
+    sinusoidal_positions,
+)
+
+TP = "model"
+MAX_DEC_POS = 32768     # extended from whisper's 448 to cover decode_32k
+
+
+def _attn_layout(cfg: ModelConfig) -> dict:
+    D, H, hd = cfg.d_model, cfg.n_heads, cfg.resolved_head_dim
+    return {
+        "ln_g": PM.ParamInfo((D,), P(None), "ones"),
+        "ln_b": PM.ParamInfo((D,), P(None), "zeros"),
+        "wq": PM.ParamInfo((D, H * hd), P(None, TP)),
+        "bq": PM.ParamInfo((H * hd,), P(TP), "zeros"),
+        "wk": PM.ParamInfo((D, H * hd), P(None, TP)),
+        "wv": PM.ParamInfo((D, H * hd), P(None, TP)),
+        "bv": PM.ParamInfo((H * hd,), P(TP), "zeros"),
+        "wo": PM.ParamInfo((H * hd, D), P(TP, None)),
+        "bo": PM.ParamInfo((D,), P(None), "zeros"),
+    }
+
+
+def _mlp_layout(cfg: ModelConfig) -> dict:
+    D, F = cfg.d_model, cfg.d_ff
+    return {
+        "ln_g": PM.ParamInfo((D,), P(None), "ones"),
+        "ln_b": PM.ParamInfo((D,), P(None), "zeros"),
+        "w_in": PM.ParamInfo((D, F), P(None, TP)),
+        "b_in": PM.ParamInfo((F,), P(TP), "zeros"),
+        "w_out": PM.ParamInfo((F, D), P(TP, None)),
+        "b_out": PM.ParamInfo((D,), P(None), "zeros"),
+    }
+
+
+class EncDecLM:
+    def __init__(self, cfg: ModelConfig, *, model_axis: int = 16, mesh=None):
+        self.cfg = cfg
+        self.model_axis = model_axis
+        self.mesh = mesh
+
+    def _dp(self):
+        if self.mesh is None:
+            return ("pod", "data")
+        return tuple(a for a in ("pod", "data") if a in self.mesh.axis_names) or None
+
+    def _shard(self, x, *spec):
+        if self.mesh is None:
+            return x
+        return lax.with_sharding_constraint(x, jax.sharding.NamedSharding(self.mesh, P(*spec)))
+
+    # -------------------------------------------------------------- layout
+    def layout(self) -> dict:
+        cfg = self.cfg
+        enc_layer = {"attn": _attn_layout(cfg), "mlp": _mlp_layout(cfg)}
+        dec_layer = {
+            "self_attn": _attn_layout(cfg),
+            "cross_attn": _attn_layout(cfg),
+            "mlp": _mlp_layout(cfg),
+        }
+        emb_spec = (
+            P(TP, None) if cfg.vocab % self.model_axis == 0
+            else (P(None, TP) if cfg.d_model % self.model_axis == 0 else P(None, None))
+        )
+        return {
+            "embed": PM.ParamInfo((cfg.vocab, cfg.d_model), emb_spec, scale=0.02),
+            "dec_pos": PM.ParamInfo((MAX_DEC_POS, cfg.d_model), P(None, None), scale=0.01),
+            "enc_layers": PM.stack(cfg.encdec.n_encoder_layers, enc_layer),
+            "dec_layers": PM.stack(cfg.n_layers, dec_layer),
+            "enc_ln_g": PM.ParamInfo((cfg.d_model,), P(None), "ones"),
+            "enc_ln_b": PM.ParamInfo((cfg.d_model,), P(None), "zeros"),
+            "dec_ln_g": PM.ParamInfo((cfg.d_model,), P(None), "ones"),
+            "dec_ln_b": PM.ParamInfo((cfg.d_model,), P(None), "zeros"),
+        }
+
+    # ------------------------------------------------------------- pieces
+    def _qkv(self, p, xq, xkv):
+        cfg = self.cfg
+        B, Sq, _ = xq.shape
+        Skv = xkv.shape[1]
+        H, hd = cfg.n_heads, cfg.resolved_head_dim
+        q = (xq @ p["wq"] + p["bq"]).reshape(B, Sq, H, hd).transpose(0, 2, 1, 3)
+        k = (xkv @ p["wk"]).reshape(B, Skv, H, hd).transpose(0, 2, 1, 3)
+        v = (xkv @ p["wv"] + p["bv"]).reshape(B, Skv, H, hd).transpose(0, 2, 1, 3)
+        return q, k, v
+
+    def _attn(self, p, x, kv, *, causal):
+        cfg = self.cfg
+        B, S, _ = x.shape
+        h = layer_norm(x, p["ln_g"], p["ln_b"], cfg.norm_eps)
+        hkv = h if kv is None else kv
+        q, k, v = self._qkv(p, h, hkv)
+        out = blockwise_attention(
+            q, k, v, causal=causal, q_block=cfg.q_block, kv_block=cfg.kv_block,
+            pairs=cfg.causal_pairs and causal, mask_mode=cfg.mask_mode,
+        )
+        out = out.transpose(0, 2, 1, 3).reshape(B, S, -1)
+        return x + out @ p["wo"] + p["bo"]
+
+    def _mlp(self, p, x):
+        h = layer_norm(x, p["ln_g"], p["ln_b"], self.cfg.norm_eps)
+        return x + gelu_mlp(h, p["w_in"], p["b_in"], p["w_out"], p["b_out"])
+
+    def _remat(self, fn):
+        if self.cfg.remat == "none":
+            return fn
+        policy = (
+            jax.checkpoint_policies.nothing_saveable
+            if self.cfg.remat == "full"
+            else jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+        )
+        return jax.checkpoint(fn, policy=policy)
+
+    # -------------------------------------------------------------- encode
+    def encode(self, params, enc_emb):
+        cfg = self.cfg
+        x = enc_emb.astype(jnp.dtype(cfg.dtype))
+        x = x + sinusoidal_positions(x.shape[1], cfg.d_model).astype(x.dtype)
+        x = self._shard(x, self._dp(), None, None)
+
+        def body(p, h):
+            h = self._attn(p["attn"], h, None, causal=False)
+            h = self._mlp(p["mlp"], h)
+            return self._shard(h, self._dp(), None, None)
+
+        body = self._remat(body)
+
+        def step(h, p):
+            return body(p, h), None
+
+        x, _ = lax.scan(step, x, params["enc_layers"])
+        return layer_norm(x, params["enc_ln_g"], params["enc_ln_b"], cfg.norm_eps)
+
+    # -------------------------------------------------------------- decode
+    def decode_stack(self, params, tokens, enc_out, pos0: int = 0):
+        cfg = self.cfg
+        B, S = tokens.shape
+        x = params["embed"][tokens].astype(jnp.dtype(cfg.dtype))
+        x = x + lax.dynamic_slice_in_dim(params["dec_pos"], pos0, S, axis=0).astype(x.dtype)
+        x = self._shard(x, self._dp(), None, None)
+
+        def body(p, h):
+            h = self._attn(p["self_attn"], h, None, causal=True)
+            h = self._attn(p["cross_attn"], h, enc_out, causal=False)
+            h = self._mlp(p["mlp"], h)
+            return self._shard(h, self._dp(), None, None)
+
+        body = self._remat(body)
+
+        def step(h, p):
+            return body(p, h), None
+
+        x, _ = lax.scan(step, x, params["dec_layers"])
+        x = layer_norm(x, params["dec_ln_g"], params["dec_ln_b"], cfg.norm_eps)
+        return x @ params["embed"].T    # tied unembedding
+
+    # ---------------------------------------------------------------- api
+    def loss(self, params, batch):
+        logits = self.decode_stack(
+            params, batch["tokens"], self.encode(params, batch["enc_emb"])
+        ).astype(jnp.float32)
+        logits = self._shard(logits, self._dp(), None, TP)
+        lse = jax.scipy.special.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, batch["labels"][..., None], axis=-1)[..., 0]
+        nll = (lse - gold).mean()
+        return nll, {"nll": nll, "aux": 0.0}
+
+    def prefill(self, params, batch):
+        logits = self.decode_stack(
+            params, batch["tokens"], self.encode(params, batch["enc_emb"])
+        )
+        return logits[:, -1:].astype(jnp.float32)
+
+    def cache_layout(self, batch: int, seq: int, enc_len: int) -> dict:
+        cfg = self.cfg
+        H, hd = cfg.n_heads, cfg.resolved_head_dim
+        dp = self._dp()
+        per = {
+            "k": PM.ParamInfo((batch, H, seq, hd), P(dp, None, TP, None), "zeros"),
+            "v": PM.ParamInfo((batch, H, seq, hd), P(dp, None, TP, None), "zeros"),
+            "cross_k": PM.ParamInfo((batch, H, enc_len, hd), P(dp, None, TP, None), "zeros"),
+            "cross_v": PM.ParamInfo((batch, H, enc_len, hd), P(dp, None, TP, None), "zeros"),
+        }
+        return {"layers": PM.stack(cfg.n_layers, per)}
+
+    def decode_step(self, params, batch):
+        """One decoder token: self-attn against cache + cross-attn (static)."""
+        cfg = self.cfg
+        tokens, cache, index = batch["tokens"], batch["cache"], batch["index"]
+        B = tokens.shape[0]
+        H, hd = cfg.n_heads, cfg.resolved_head_dim
+        x = params["embed"][tokens].astype(jnp.dtype(cfg.dtype))
+        x = x + lax.dynamic_slice_in_dim(params["dec_pos"], index, 1, axis=0).astype(x.dtype)
+        x = self._shard(x, self._dp(), None, None)
+
+        def step(h, pc):
+            p, c = pc
+            sp = p["self_attn"]
+            hn = layer_norm(h, sp["ln_g"], sp["ln_b"], cfg.norm_eps)
+            q, k, v = self._qkv(sp, hn, hn)
+            kc = lax.dynamic_update_slice_in_dim(c["k"], k, index, axis=2)
+            vc = lax.dynamic_update_slice_in_dim(c["v"], v, index, axis=2)
+            out = decode_attention(q, kc, vc, index + 1)
+            h = h + out.transpose(0, 2, 1, 3).reshape(B, 1, -1) @ sp["wo"] + sp["bo"]
+            cp = p["cross_attn"]
+            hn = layer_norm(h, cp["ln_g"], cp["ln_b"], cfg.norm_eps)
+            q = (hn @ cp["wq"] + cp["bq"]).reshape(B, 1, H, hd).transpose(0, 2, 1, 3)
+            out = decode_attention(q, c["cross_k"], c["cross_v"], c["cross_k"].shape[2])
+            h = h + out.transpose(0, 2, 1, 3).reshape(B, 1, -1) @ cp["wo"] + cp["bo"]
+            h = self._mlp(p["mlp"], h)
+            return h, {"k": kc, "v": vc, "cross_k": c["cross_k"], "cross_v": c["cross_v"]}
+
+        x, new_layers = lax.scan(step, x, (params["dec_layers"], cache["layers"]))
+        x = layer_norm(x, params["dec_ln_g"], params["dec_ln_b"], cfg.norm_eps)
+        logits = (x @ params["embed"].T).astype(jnp.float32)
+        return logits, {"layers": new_layers}

@@ -1,0 +1,459 @@
+"""Hymba: parallel attention + Mamba (SSM) heads in every block.
+
+Per block both paths see the same normed input; outputs are RMS-normed and
+averaged before the output projection (the paper's fusion).  128 learnable
+meta tokens are prepended to every sequence; attention is sliding-window in
+all but three global layers (first / middle / last).  The SSM path is a
+selective scan with per-channel diagonal state (N=16), computed chunkwise
+(associative scan inside chunks, sequential carry across — TPU-friendly).
+
+Decode caches: window-sized KV ring buffers for SWA layers, full-length KV
+for the 3 global layers, (conv tail + diagonal state) for the SSM path.
+This is why hymba runs the long_500k cell: decode state is O(window), not
+O(sequence).
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from ..configs.base import ModelConfig
+from . import params as PM
+from .layers import blockwise_attention, decode_attention, rms_norm, rope, swiglu
+
+TP = "model"
+
+
+# ----------------------------------------------------------- diagonal SSM
+def diag_ssm_scan(a, bx, *, chunk: int, h0=None):
+    """h_t = a_t * h_{t-1} + bx_t  over time axis 1.
+
+    a, bx: (B, S, ...) with matching trailing dims.  Chunked: associative
+    scan inside chunks (log-depth), lax.scan carry across chunks.
+    Returns (h (B,S,...), h_last).
+    """
+    B, S = a.shape[:2]
+    L = min(chunk, S)
+    S0 = S
+    if S % L:
+        # pad time with identity steps (a=1, bx=0): h holds, outputs sliced
+        pad = L - S % L
+        a = jnp.concatenate([a, jnp.ones((B, pad, *a.shape[2:]), a.dtype)], axis=1)
+        bx = jnp.concatenate([bx, jnp.zeros((B, pad, *bx.shape[2:]), bx.dtype)], axis=1)
+        S = a.shape[1]
+    nc = S // L
+    shape_tail = a.shape[2:]
+    a_c = a.reshape(B, nc, L, *shape_tail).transpose(1, 0, 2, *range(3, a.ndim + 1))
+    b_c = bx.reshape(B, nc, L, *shape_tail).transpose(1, 0, 2, *range(3, bx.ndim + 1))
+    if h0 is None:
+        h0 = jnp.zeros((B, *shape_tail), a.dtype)
+
+    def chunk_step(h_in, ab):
+        ac, bc = ab
+
+        def combine(x, y):
+            a1, b1 = x
+            a2, b2 = y
+            return a1 * a2, a2 * b1 + b2
+
+        A, Bc = lax.associative_scan(combine, (ac, bc), axis=1)
+        h = A * h_in[:, None] + Bc
+        return h[:, -1], h
+
+    h_last, hs = lax.scan(chunk_step, h0, (a_c, b_c))
+    h = hs.transpose(1, 0, 2, *range(3, hs.ndim)).reshape(B, S, *shape_tail)
+    return h[:, :S0], h_last
+
+
+def diag_ssm_scan_factored(a, b_in, x_in, c_out, *, chunk: int, h0=None):
+    """Factored selective scan: never materialises (B,S,h,chd,N) globally.
+
+    a: (B,S,h,N) decay; b_in: (B,S,h,N); x_in: (B,S,h,chd); c_out: (B,S,h,N).
+    Computes y[t,c] = c_t . h_t with h_t = a_t*h_{t-1} + (b_t x_t^T); the
+    (chd x N) outer product and the state exist only chunk-locally inside the
+    scan body — the §Perf fix for the hymba memory term (EXPERIMENTS.md).
+    Returns (y (B,S,h,chd), h_last (B,h,chd,N)).
+    """
+    B, S, H, N = a.shape
+    chd = x_in.shape[-1]
+    L = min(chunk, S)
+    S0 = S
+    if S % L:
+        pad = L - S % L
+        a = jnp.concatenate([a, jnp.ones((B, pad, H, N), a.dtype)], axis=1)
+        b_in = jnp.concatenate([b_in, jnp.zeros((B, pad, H, N), b_in.dtype)], axis=1)
+        x_in = jnp.concatenate([x_in, jnp.zeros((B, pad, H, chd), x_in.dtype)], axis=1)
+        c_out = jnp.concatenate([c_out, jnp.zeros((B, pad, H, N), c_out.dtype)], axis=1)
+        S = a.shape[1]
+    nc = S // L
+
+    def chunks(t):
+        return t.reshape(B, nc, L, *t.shape[2:]).transpose(1, 0, 2, *range(3, t.ndim + 1))
+
+    a_c, b_c, x_c, c_c = chunks(a), chunks(b_in), chunks(x_in), chunks(c_out)
+    if h0 is None:
+        h0 = jnp.zeros((B, H, chd, N), jnp.float32)
+
+    def chunk_step(h_in, abxc):
+        ac, bc, xc, cc = abxc                        # (B,L,H,*)
+        bx = bc[..., None, :] * xc[..., None]        # (B,L,H,chd,N) chunk-local
+        af = jnp.broadcast_to(ac[..., None, :], bx.shape)
+
+        def combine(u, v):
+            a1, b1 = u
+            a2, b2 = v
+            return a1 * a2, a2 * b1 + b2
+
+        A, Bc = lax.associative_scan(
+            combine, (af.astype(jnp.float32), bx.astype(jnp.float32)), axis=1
+        )
+        h = A * h_in[:, None] + Bc                   # (B,L,H,chd,N)
+        y = jnp.einsum("blhcn,blhn->blhc", h, cc.astype(jnp.float32))
+        return h[:, -1], y
+
+    h_last, ys = lax.scan(chunk_step, h0, (a_c, b_c, x_c, c_c))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(B, S, H, chd)
+    return y[:, :S0], h_last
+
+
+
+
+def ssd_scan(lf, b_in, x_in, c_out, *, chunk: int, h0=None):
+    """Mamba-2 SSD chunked scan: scalar per-head decay, matmul-shaped.
+
+    lf: (B,S,H) per-step log-decay (<= 0); b_in/c_out: (B,S,H,N);
+    x_in: (B,S,H,chd).  Within a chunk the exact solution is
+
+        y[t] = C_t . ( exp(L_t) h_in + sum_{s<=t} exp(L_t - L_s) b_s x_s^T )
+
+    computed as two einsums with a lower-triangular (L,L) decay matrix per
+    (B,H) — MXU-shaped, cheap backward (the TPU-native replacement for the
+    per-state-channel associative scan; see DESIGN.md hardware-adaptation).
+    Returns (y (B,S,H,chd), h_last (B,H,chd,N)).
+    """
+    B, S, H = lf.shape
+    N = b_in.shape[-1]
+    chd = x_in.shape[-1]
+    L = min(chunk, S)
+    S0 = S
+    if S % L:
+        pad = L - S % L
+        lf = jnp.concatenate([lf, jnp.zeros((B, pad, H), lf.dtype)], axis=1)
+        b_in = jnp.concatenate([b_in, jnp.zeros((B, pad, H, N), b_in.dtype)], axis=1)
+        x_in = jnp.concatenate([x_in, jnp.zeros((B, pad, H, chd), x_in.dtype)], axis=1)
+        c_out = jnp.concatenate([c_out, jnp.zeros((B, pad, H, N), c_out.dtype)], axis=1)
+        S = lf.shape[1]
+    nc = S // L
+
+    def chunks(t):
+        return t.reshape(B, nc, L, *t.shape[2:]).transpose(1, 0, 2, *range(3, t.ndim + 1))
+
+    lf_c, b_c, x_c, c_c = chunks(lf.astype(jnp.float32)), chunks(b_in), chunks(x_in), chunks(c_out)
+    if h0 is None:
+        h0 = jnp.zeros((B, H, chd, N), jnp.float32)
+    tri = jnp.tril(jnp.ones((L, L), bool))
+
+    def chunk_step(h_in, xs):
+        lfc, bc, xc, cc = xs                        # (B,L,H,*)
+        cum = jnp.cumsum(lfc, axis=1)               # (B,L,H) inclusive
+        # decay matrix D[t,s] = exp(cum_t - cum_s) for s <= t
+        D = jnp.where(
+            tri[None, :, :, None],
+            jnp.exp(cum[:, :, None] - cum[:, None, :]),
+            0.0,
+        )                                            # (B,L,L,H)
+        M = jnp.einsum("blhn,bshn->blsh", cc.astype(jnp.float32), bc.astype(jnp.float32))
+        y = jnp.einsum("blsh,bshc->blhc", M * D, xc.astype(jnp.float32))
+        # inter-chunk: read h_in decayed to each t
+        y = y + jnp.einsum(
+            "blhn,bhcn->blhc", cc.astype(jnp.float32) * jnp.exp(cum)[..., None], h_in
+        )
+        # state update: h_next = exp(cum_L) h_in + sum_s exp(cum_L - cum_s) b_s x_s^T
+        w = jnp.exp(cum[:, -1:, :] - cum)            # (B,L,H)
+        h_next = jnp.exp(cum[:, -1])[..., None, None] * h_in + jnp.einsum(
+            "bshc,bshn->bhcn", (xc.astype(jnp.float32) * w[..., None]), bc.astype(jnp.float32)
+        )
+        return h_next, y
+
+    h_last, ys = lax.scan(chunk_step, h0, (lf_c, b_c, x_c, c_c))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(B, S, H, chd)
+    return y[:, :S0].astype(x_in.dtype), h_last
+
+
+class Hymba:
+    def __init__(self, cfg: ModelConfig, *, model_axis: int = 16, mesh=None):
+        self.cfg = cfg
+        self.mesh = mesh
+        self.model_axis = model_axis
+        D = cfg.d_model
+        self.ed = cfg.ssm.expand * D          # SSM inner width (3200)
+        self.N = cfg.ssm.state_dim
+        self.n_ssm_heads = cfg.hybrid.n_ssm_heads
+        hb = cfg.hybrid
+        g = sorted(hb.global_layers)
+        assert g[0] == 0 and g[-1] == cfg.n_layers - 1, "expect first/last global"
+        # segment plan: alternating [global, swa-run, global, swa-run, ...]
+        self.swa_runs = [g[i + 1] - g[i] - 1 for i in range(len(g) - 1)]
+        self.n_global = len(g)
+
+    def _dp(self):
+        if self.mesh is None:
+            return ("pod", "data")
+        return tuple(a for a in ("pod", "data") if a in self.mesh.axis_names) or None
+
+    def _shard(self, x, *spec):
+        if self.mesh is None:
+            return x
+        return lax.with_sharding_constraint(x, jax.sharding.NamedSharding(self.mesh, P(*spec)))
+
+    # -------------------------------------------------------------- layout
+    def block_layout(self) -> dict:
+        cfg = self.cfg
+        D, H, Hkv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+        ed, N, nsh = self.ed, self.N, self.n_ssm_heads
+        return {
+            "ln": PM.ParamInfo((D,), P(None), "ones"),
+            # attention path
+            "wq": PM.ParamInfo((D, H * hd), P(None, TP)),
+            "wk": PM.ParamInfo((D, Hkv * hd), P(None, TP)),
+            "wv": PM.ParamInfo((D, Hkv * hd), P(None, TP)),
+            "attn_ln": PM.ParamInfo((H * hd,), P(TP), "ones"),
+            # ssm path (mamba-style selective scan, per-head B/C/dt)
+            "w_in": PM.ParamInfo((D, 2 * ed), P(None, TP)),
+            "conv": PM.ParamInfo((cfg.ssm.conv_width, ed), P(None, TP), scale=0.3),
+            "w_bc": PM.ParamInfo((ed, nsh * 2 * N), P(TP, None), scale=0.02),
+            "w_dt": PM.ParamInfo((ed, nsh), P(TP, None), scale=0.02),
+            "b_dt": PM.ParamInfo((nsh,), P(None), "zeros"),
+            "a_log": PM.ParamInfo((nsh,), P(None), "zeros"),
+            "d_skip": PM.ParamInfo((ed,), P(TP), "ones"),
+            "ssm_proj": PM.ParamInfo((ed, H * hd), P(TP, None)),
+            "ssm_ln": PM.ParamInfo((H * hd,), P(TP), "ones"),
+            # fusion + mlp
+            "wo": PM.ParamInfo((H * hd, D), P(TP, None)),
+            "mlp_ln": PM.ParamInfo((D,), P(None), "ones"),
+            "w_gate": PM.ParamInfo((D, cfg.d_ff), P(None, TP)),
+            "w_up": PM.ParamInfo((D, cfg.d_ff), P(None, TP)),
+            "w_down": PM.ParamInfo((cfg.d_ff, D), P(TP, None)),
+        }
+
+    def layout(self) -> dict:
+        cfg = self.cfg
+        div_v = cfg.vocab % self.model_axis == 0
+        div_d = cfg.d_model % self.model_axis == 0
+        emb_spec = P(TP, None) if div_v else (P(None, TP) if div_d else P(None, None))
+        head_spec = P(None, TP) if div_v else (P(TP, None) if div_d else P(None, None))
+        lay: dict[str, Any] = {
+            "embed": PM.ParamInfo((cfg.vocab, cfg.d_model), emb_spec, scale=0.02),
+            "meta": PM.ParamInfo((cfg.hybrid.meta_tokens, cfg.d_model), P(None, None), scale=0.02),
+            "final_ln": PM.ParamInfo((cfg.d_model,), P(None), "ones"),
+            "lm_head": PM.ParamInfo((cfg.d_model, cfg.vocab), head_spec, scale=0.02),
+        }
+        for i in range(self.n_global):
+            lay[f"global_{i}"] = self.block_layout()
+        for i, run in enumerate(self.swa_runs):
+            lay[f"swa_{i}"] = PM.stack(run, self.block_layout())
+        return lay
+
+    # --------------------------------------------------------------- paths
+    def _ssm_path(self, p, h, *, state=None):
+        """Selective scan.  h: (B,S,D) normed input.  Returns (B,S,H*hd)."""
+        cfg = self.cfg
+        B, S, D = h.shape
+        ed, N, nsh = self.ed, self.N, self.n_ssm_heads
+        chd = ed // nsh                                     # channels per head
+        up = h @ p["w_in"]
+        x_in, z = jnp.split(up, 2, axis=-1)                 # (B,S,ed)
+        if state is None:
+            conv_in = x_in
+            conv_state = None
+        else:
+            conv_in = jnp.concatenate([state["conv"], x_in], axis=1)
+            conv_state = conv_in[:, 1:]
+        W = p["conv"].shape[0]
+        if state is None:
+            padded = jnp.pad(conv_in, ((0, 0), (W - 1, 0), (0, 0)))
+        else:
+            padded = conv_in
+        xc = jax.nn.silu(sum(padded[:, i : i + S] * p["conv"][i] for i in range(W)))
+
+        bc = (xc @ p["w_bc"]).reshape(B, S, nsh, 2, N)
+        B_t, C_t = bc[..., 0, :], bc[..., 1, :]             # (B,S,nsh,N)
+        dt = jax.nn.softplus(xc @ p["w_dt"] + p["b_dt"])    # (B,S,nsh)
+        A = -jnp.exp(p["a_log"].astype(jnp.float32))        # (nsh,) scalar/head
+        lf = dt * A                                          # (B,S,nsh) log-decay
+
+        xh = xc.reshape(B, S, nsh, chd)
+        bx_in = dt[..., None] * B_t                          # (B,S,nsh,N)
+        if state is None:
+            y, h_last = ssd_scan(lf, bx_in, xh, C_t, chunk=cfg.ssm.chunk)
+        else:
+            a_t = jnp.exp(lf[:, 0])[..., None, None]         # (B,nsh,1,1)
+            outer = xh[:, 0][..., None] * bx_in[:, 0][..., None, :]   # (B,nsh,chd,N)
+            h_last = a_t * state["ssm"] + outer.astype(jnp.float32)
+            y = jnp.einsum("bhcn,bhn->bhc", h_last, C_t[:, 0].astype(jnp.float32))[:, None]
+        y = y.reshape(B, S, ed).astype(h.dtype) + xc * p["d_skip"]
+        y = y * jax.nn.silu(z)
+        out = y @ p["ssm_proj"]
+        new_state = None if state is None else {"conv": conv_state, "ssm": h_last}
+        return out, new_state
+
+    def _block(self, p, x, positions, *, window: int):
+        cfg = self.cfg
+        B, S, D = x.shape
+        H, Hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+        h = rms_norm(x, p["ln"], cfg.norm_eps)
+        q = (h @ p["wq"]).reshape(B, S, H, hd).transpose(0, 2, 1, 3)
+        k = (h @ p["wk"]).reshape(B, S, Hkv, hd).transpose(0, 2, 1, 3)
+        v = (h @ p["wv"]).reshape(B, S, Hkv, hd).transpose(0, 2, 1, 3)
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+        attn = blockwise_attention(
+            q, k, v, causal=True, window=window,
+            q_block=cfg.q_block, kv_block=cfg.kv_block, pairs=cfg.causal_pairs,
+            mask_mode=cfg.mask_mode,
+        )
+        attn = attn.transpose(0, 2, 1, 3).reshape(B, S, H * hd)
+        ssm, _ = self._ssm_path(p, h)
+        fused = 0.5 * (
+            rms_norm(attn, p["attn_ln"], cfg.norm_eps)
+            + rms_norm(ssm, p["ssm_ln"], cfg.norm_eps)
+        )
+        x = x + fused @ p["wo"]
+        hm = rms_norm(x, p["mlp_ln"], cfg.norm_eps)
+        x = x + swiglu(hm, p["w_gate"], p["w_up"], p["w_down"])
+        return self._shard(x, self._dp(), None, None)
+
+    def _remat(self, fn):
+        if self.cfg.remat == "none":
+            return fn
+        policy = (
+            jax.checkpoint_policies.nothing_saveable
+            if self.cfg.remat == "full"
+            else jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+        )
+        return jax.checkpoint(fn, policy=policy)
+
+    # ------------------------------------------------------------- forward
+    def backbone(self, params, x):
+        cfg = self.cfg
+        positions = jnp.arange(x.shape[1])
+        win = cfg.hybrid.sliding_window
+        g_block = self._remat(lambda p, h: self._block(p, h, positions, window=0))
+        s_block = self._remat(lambda p, h: self._block(p, h, positions, window=win))
+
+        for i in range(self.n_global):
+            x = g_block(params[f"global_{i}"], x)
+            if i < len(self.swa_runs):
+
+                def step(h, p):
+                    return s_block(p, h), None
+
+                x, _ = lax.scan(step, x, params[f"swa_{i}"])
+        return rms_norm(x, params["final_ln"], cfg.norm_eps)
+
+    def _embed_with_meta(self, params, tokens):
+        x = params["embed"][tokens].astype(jnp.dtype(self.cfg.dtype))
+        meta = jnp.broadcast_to(
+            params["meta"].astype(x.dtype)[None],
+            (x.shape[0], *params["meta"].shape),
+        )
+        return jnp.concatenate([meta, x], axis=1)
+
+    def loss(self, params, batch):
+        cfg = self.cfg
+        nm = cfg.hybrid.meta_tokens
+        x = self._embed_with_meta(params, batch["tokens"])
+        x = self._shard(x, self._dp(), None, None)
+        h = self.backbone(params, x)[:, nm:]
+        logits = (h @ params["lm_head"]).astype(jnp.float32)
+        lse = jax.scipy.special.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, batch["labels"][..., None], axis=-1)[..., 0]
+        nll = (lse - gold).mean()
+        return nll, {"nll": nll, "aux": 0.0}
+
+    def prefill(self, params, batch):
+        x = self._embed_with_meta(params, batch["tokens"])
+        h = self.backbone(params, x)
+        return (h[:, -1:] @ params["lm_head"]).astype(jnp.float32)
+
+    # -------------------------------------------------------------- decode
+    def cache_layout(self, batch: int, seq: int) -> dict:
+        cfg = self.cfg
+        Hkv, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+        dp = self._dp()
+        W = cfg.ssm.conv_width
+        win = cfg.hybrid.sliding_window
+
+        def kv(S):
+            return {
+                "k": PM.ParamInfo((batch, Hkv, S, hd), P(dp, None, TP, None), "zeros"),
+                "v": PM.ParamInfo((batch, Hkv, S, hd), P(dp, None, TP, None), "zeros"),
+                "conv": PM.ParamInfo((batch, W - 1, self.ed), P(dp, None, TP), "zeros"),
+                "ssm": PM.ParamInfo(
+                    (batch, self.n_ssm_heads, self.ed // self.n_ssm_heads, self.N),
+                    P(dp, None, TP, None), "zeros", dtype="float32",
+                ),
+            }
+
+        lay: dict[str, Any] = {}
+        for i in range(self.n_global):
+            lay[f"global_{i}"] = kv(seq)
+        for i, run in enumerate(self.swa_runs):
+            lay[f"swa_{i}"] = PM.stack(run, kv(min(win, seq)))
+        return lay
+
+    def _decode_block(self, p, x, c, index, *, window: int):
+        cfg = self.cfg
+        B = x.shape[0]
+        H, Hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+        h = rms_norm(x, p["ln"], cfg.norm_eps)
+        pos = jnp.asarray([index])
+        q = (h @ p["wq"]).reshape(B, 1, H, hd).transpose(0, 2, 1, 3)
+        k = (h @ p["wk"]).reshape(B, 1, Hkv, hd).transpose(0, 2, 1, 3)
+        v = (h @ p["wv"]).reshape(B, 1, Hkv, hd).transpose(0, 2, 1, 3)
+        q = rope(q, pos, cfg.rope_theta)
+        k = rope(k, pos, cfg.rope_theta)
+        S_cache = c["k"].shape[2]
+        slot = index % S_cache if window else index
+        kc = lax.dynamic_update_slice_in_dim(c["k"], k, slot, axis=2)
+        vc = lax.dynamic_update_slice_in_dim(c["v"], v, slot, axis=2)
+        valid = jnp.minimum(index + 1, S_cache)
+        attn = decode_attention(q, kc, vc, valid)
+        attn = attn.transpose(0, 2, 1, 3).reshape(B, 1, H * hd)
+        ssm, new_ssm = self._ssm_path(p, h, state={"conv": c["conv"], "ssm": c["ssm"]})
+        fused = 0.5 * (
+            rms_norm(attn, p["attn_ln"], cfg.norm_eps)
+            + rms_norm(ssm, p["ssm_ln"], cfg.norm_eps)
+        )
+        x = x + fused @ p["wo"]
+        hm = rms_norm(x, p["mlp_ln"], cfg.norm_eps)
+        x = x + swiglu(hm, p["w_gate"], p["w_up"], p["w_down"])
+        return x, {"k": kc, "v": vc, "conv": new_ssm["conv"], "ssm": new_ssm["ssm"]}
+
+    def decode_step(self, params, batch):
+        cfg = self.cfg
+        tokens, cache, index = batch["tokens"], batch["cache"], batch["index"]
+        # meta tokens occupy slots [0, nm); caller passes index offset by nm
+        x = params["embed"][tokens].astype(jnp.dtype(cfg.dtype))
+        x = self._shard(x, self._dp(), None, None)
+        win = cfg.hybrid.sliding_window
+        new_cache: dict[str, Any] = {}
+        for i in range(self.n_global):
+            x, nc = self._decode_block(params[f"global_{i}"], x, cache[f"global_{i}"], index, window=0)
+            new_cache[f"global_{i}"] = nc
+            if i < len(self.swa_runs):
+
+                def step(h, pc):
+                    p, cc = pc
+                    return self._decode_block(p, h, cc, index, window=win)
+
+                x, stacked = lax.scan(step, x, (params[f"swa_{i}"], cache[f"swa_{i}"]))
+                new_cache[f"swa_{i}"] = stacked
+        h = rms_norm(x, params["final_ln"], cfg.norm_eps)
+        logits = (h @ params["lm_head"]).astype(jnp.float32)
+        return logits, new_cache

@@ -1,0 +1,142 @@
+"""Model registry: arch id -> model object + per-shape abstract inputs.
+
+``build_model(cfg)`` returns the family implementation; ``input_specs`` makes
+the ShapeDtypeStruct stand-ins (weak-type-correct, shardable, no allocation)
+for every (arch x shape) cell, plus the matching PartitionSpec trees — the
+single entry point the dry-run, launcher and benchmarks share.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from ..configs.base import ModelConfig, ShapeConfig
+from . import params as PM
+from .encdec import EncDecLM
+from .hymba import Hymba
+from .lm import DecoderLM
+from .xlstm import XLSTM
+
+#: encoder frames given to whisper when decoding (30 s window -> 1500 frames,
+#: padded to a block-friendly 1536)
+WHISPER_DECODE_ENC_LEN = 1536
+
+
+def build_model(cfg: ModelConfig, *, model_axis: int = 16, mesh=None):
+    if cfg.family in ("dense", "moe", "vlm"):
+        return DecoderLM(cfg, model_axis=model_axis, mesh=mesh)
+    if cfg.family == "encdec":
+        return EncDecLM(cfg, model_axis=model_axis, mesh=mesh)
+    if cfg.family == "ssm":
+        return XLSTM(cfg, model_axis=model_axis, mesh=mesh)
+    if cfg.family == "hybrid":
+        return Hymba(cfg, model_axis=model_axis, mesh=mesh)
+    raise ValueError(f"unknown family {cfg.family!r}")
+
+
+def _dp_axes(mesh) -> tuple[str, ...]:
+    if mesh is None:
+        return ("data",)
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def _batch_spec(mesh, batch: int, *trailing) -> P:
+    """Shard batch over (pod, data) when divisible; replicate otherwise
+    (long_500k has batch 1)."""
+    dp = _dp_axes(mesh)
+    if mesh is not None:
+        dp_size = 1
+        for a in dp:
+            dp_size *= mesh.shape[a]
+        if batch % max(1, dp_size) != 0:
+            return P(None, *trailing)
+    return P(dp if len(dp) > 1 else (dp[0] if dp else None), *trailing)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig, *, mesh=None, model=None):
+    """(abstract batch pytree, matching sharding-spec pytree) for one cell."""
+    model = model or build_model(cfg, mesh=mesh)
+    B, S = shape.global_batch, shape.seq_len
+    tok = jax.ShapeDtypeStruct((B, S), jnp.int32)
+    tok_spec = _batch_spec(mesh, B, None)
+    dt = jnp.dtype(cfg.dtype)
+
+    if shape.kind in ("train", "prefill"):
+        if cfg.family == "encdec":
+            batch = {
+                "enc_emb": jax.ShapeDtypeStruct((B, S, cfg.d_model), dt),
+                "tokens": tok,
+                "labels": tok,
+            }
+            spec = {
+                "enc_emb": _batch_spec(mesh, B, None, None),
+                "tokens": tok_spec,
+                "labels": tok_spec,
+            }
+        elif cfg.family == "vlm":
+            n_img = cfg.vlm.n_image_tokens
+            t = jax.ShapeDtypeStruct((B, S - n_img), jnp.int32)
+            batch = {
+                "img_emb": jax.ShapeDtypeStruct((B, n_img, cfg.d_model), dt),
+                "tokens": t,
+                "labels": t,
+            }
+            spec = {
+                "img_emb": _batch_spec(mesh, B, None, None),
+                "tokens": tok_spec,
+                "labels": tok_spec,
+            }
+        else:
+            batch = {"tokens": tok, "labels": tok}
+            spec = {"tokens": tok_spec, "labels": tok_spec}
+        if shape.kind == "prefill":
+            batch.pop("labels")
+            spec.pop("labels")
+        return batch, spec
+
+    # ------------------------------------------------------------- decode
+    tok1 = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+    if cfg.family == "encdec":
+        cache_lay = model.cache_layout(B, S, WHISPER_DECODE_ENC_LEN)
+    else:
+        cache_lay = model.cache_layout(B, S)
+    cache_abs = PM.abstract(cache_lay, cfg.dtype)
+    cache_spec = PM.specs(cache_lay)
+    if mesh is not None:
+        # drop batch sharding from cache specs when batch is unshardable
+        dp = _dp_axes(mesh)
+        dp_size = 1
+        for a in dp:
+            dp_size *= mesh.shape[a]
+        if B % max(1, dp_size) != 0:
+            def _strip_dp(s: P) -> P:
+                def drop(e):
+                    if e in ("data", "pod"):
+                        return None
+                    if isinstance(e, tuple) and set(e) & {"data", "pod"}:
+                        rest = tuple(a for a in e if a not in ("data", "pod"))
+                        return rest if rest else None
+                    return e
+
+                return P(*[drop(e) for e in s])
+
+            cache_spec = jax.tree.map(
+                _strip_dp, cache_spec, is_leaf=lambda x: isinstance(x, P)
+            )
+    batch = {"tokens": tok1, "cache": cache_abs, "index": jax.ShapeDtypeStruct((), jnp.int32)}
+    spec = {"tokens": _batch_spec(mesh, B, None), "cache": cache_spec, "index": P()}
+    return batch, spec
+
+
+def step_fn(cfg: ModelConfig, shape: ShapeConfig, model=None):
+    """The jit target for one cell: loss / prefill / decode."""
+    model = model or build_model(cfg)
+    if shape.kind == "train":
+        return model.loss
+    if shape.kind == "prefill":
+        return model.prefill
+    return model.decode_step

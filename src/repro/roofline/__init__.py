@@ -1,0 +1,9 @@
+"""Roofline analysis: trip-count-aware HLO walking + 3-term model."""
+
+from .analysis import HBM_BW, ICI_BW, PEAK_FLOPS, RooflineReport, model_flops
+from .hlo_walk import analyze, multipliers, parse_computations
+
+__all__ = [
+    "HBM_BW", "ICI_BW", "PEAK_FLOPS", "RooflineReport", "analyze",
+    "model_flops", "multipliers", "parse_computations",
+]

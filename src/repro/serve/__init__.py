@@ -1,0 +1,6 @@
+"""Serving: batched KV-cache decode engine."""
+
+from .engine import ServeConfig, ServingEngine
+from .flash_decoding import make_flash_decode
+
+__all__ = ["ServeConfig", "ServingEngine", "make_flash_decode"]

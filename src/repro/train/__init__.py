@@ -1,0 +1,22 @@
+"""Training substrate: step, optimizer (ZeRO), checkpointing, fault tolerance."""
+
+from .checkpoint import CheckpointManager, SamplerState, config_digest
+from .fault import PreemptionGuard, RestartPolicy, StragglerMonitor, run_with_restarts
+from .optimizer import (
+    AdamWConfig,
+    adamw_update,
+    compress_int8,
+    decompress_int8,
+    init_opt_state,
+    opt_state_specs,
+    zero_spec_for,
+)
+from .step import init_train_state, make_eval_step, make_train_step
+
+__all__ = [
+    "AdamWConfig", "CheckpointManager", "PreemptionGuard", "RestartPolicy",
+    "SamplerState", "StragglerMonitor", "adamw_update", "compress_int8",
+    "config_digest", "decompress_int8", "init_opt_state", "init_train_state",
+    "make_eval_step", "make_train_step", "opt_state_specs",
+    "run_with_restarts", "zero_spec_for",
+]

@@ -1,0 +1,50 @@
+"""train_step builder: loss + grad + AdamW update, pjit-ready.
+
+The returned function is the dry-run's ``train_step`` lowering target:
+``(params, opt_state, batch) -> (params, opt_state, metrics)`` with donated
+carry buffers.  Sharding comes from the model layout specs + ZeRO opt-state
+specs; activations follow the in-model constraints.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .optimizer import AdamWConfig, adamw_update, init_opt_state
+
+
+def make_train_step(model, opt_cfg: Optional[AdamWConfig] = None):
+    opt_cfg = opt_cfg or AdamWConfig()
+
+    def train_step(params, opt_state, batch):
+        def loss_fn(p):
+            loss, metrics = model.loss(p, batch)
+            return loss, metrics
+
+        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+        new_params, new_opt, opt_metrics = adamw_update(grads, opt_state, params, opt_cfg)
+        metrics = {**metrics, **opt_metrics, "loss": loss}
+        return new_params, new_opt, metrics
+
+    return train_step
+
+
+def make_eval_step(model):
+    def eval_step(params, batch):
+        loss, metrics = model.loss(params, batch)
+        return {**metrics, "loss": loss}
+
+    return eval_step
+
+
+def init_train_state(model, key, opt_cfg: Optional[AdamWConfig] = None):
+    """Real-array initialisation (examples / integration tests)."""
+    from ..models import params as PM
+
+    opt_cfg = opt_cfg or AdamWConfig()
+    params = PM.materialize(model.layout(), key, model.cfg.dtype)
+    return params, init_opt_state(params, opt_cfg)

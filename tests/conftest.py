@@ -1,0 +1,9 @@
+import os
+
+# Tests must see the 1 real CPU device (the 512-device override is for the
+# dry-run binary ONLY); make sure an inherited env cannot leak it here.
+os.environ.pop("XLA_FLAGS", None)
+
+import jax
+
+jax.config.update("jax_enable_x64", False)

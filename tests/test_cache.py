@@ -1,0 +1,125 @@
+"""CacheManager: dataset-granular lifecycle (Requirement 2) + properties."""
+
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import (
+    CacheFullError,
+    CacheManager,
+    CacheState,
+    DatasetSpec,
+    EvictionPolicy,
+    SimClock,
+    StripeStore,
+    Topology,
+    TopologyConfig,
+)
+
+
+def _cluster(capacity=10_000, policy=EvictionPolicy.LRU):
+    clock = SimClock()
+    topo = Topology(TopologyConfig(), clock)
+    store = StripeStore(topo)
+    cache = CacheManager(topo, store, clock, capacity_per_node=capacity, policy=policy,
+                         items_per_chunk=4)
+    return clock, topo, store, cache
+
+
+def _spec(name, items=40, item_bytes=100):
+    return DatasetSpec(name, f"nfs://{name}", items, item_bytes)
+
+
+def test_admit_all_or_nothing():
+    clock, topo, store, cache = _cluster(capacity=500)   # 4 nodes x 500 = 2000
+    cache.register(_spec("big", items=100, item_bytes=100))  # needs 10000
+    with pytest.raises(CacheFullError):
+        cache.admit("big", topo.nodes[:4])
+    assert not store.manifests          # nothing partially cached
+
+
+def test_lru_eviction_is_whole_dataset():
+    clock, topo, store, cache = _cluster(capacity=1500)  # 6000 aggregate
+    for name in ("a", "b", "c"):
+        cache.register(_spec(name, items=20, item_bytes=100))   # 2000 each
+        cache.admit(name, topo.nodes[:4])
+        cache.mark_filled(name)
+        cache.touch(name)
+        clock.now += 1.0
+    # a,b,c cached = 6000 full; admitting d evicts the LRU (a) ENTIRELY
+    cache.register(_spec("d", items=20, item_bytes=100))
+    cache.admit("d", topo.nodes[:4])
+    assert "a" not in store.manifests
+    assert cache.entries["a"].state is CacheState.REGISTERED
+    assert "b" in store.manifests and "c" in store.manifests
+
+
+def test_pinned_datasets_never_evicted():
+    clock, topo, store, cache = _cluster(capacity=1000)  # 4000 aggregate
+    cache.register(_spec("keep", items=20, item_bytes=100))
+    cache.admit("keep", topo.nodes[:4])
+    cache.mark_filled("keep")
+    cache.pin("keep")
+    cache.register(_spec("other", items=30, item_bytes=100))   # 3000 > remaining
+    with pytest.raises(CacheFullError):
+        cache.admit("other", topo.nodes[:4])
+    assert "keep" in store.manifests
+
+
+def test_manual_policy_refuses_instead_of_evicting():
+    clock, topo, store, cache = _cluster(capacity=600, policy=EvictionPolicy.MANUAL)
+    cache.register(_spec("a", items=20, item_bytes=100))
+    cache.admit("a", topo.nodes[:4])
+    cache.mark_filled("a")
+    cache.register(_spec("b", items=20, item_bytes=100))
+    with pytest.raises(CacheFullError):
+        cache.admit("b", topo.nodes[:4])
+    cache.evict("a")                     # user frees space explicitly
+    cache.admit("b", topo.nodes[:4])
+
+
+def test_prefetch_books_time_and_marks_cached():
+    clock, topo, store, cache = _cluster(capacity=100_000)
+    cache.register(_spec("pf", items=100, item_bytes=1000))
+    done = cache.prefetch("pf", topo.nodes[:4])
+    clock.run()
+    assert done.fired
+    assert cache.is_cached("pf")
+    assert clock.now > 0                  # remote transfer took simulated time
+
+
+def test_lifecycle_decoupled_from_jobs():
+    """Dataset outlives the 'job': still cached after eviction of nothing."""
+    clock, topo, store, cache = _cluster()
+    cache.register(_spec("ds"))
+    cache.admit("ds", topo.nodes[:4])
+    cache.mark_filled("ds")
+    # job ends: no cache API call happens — dataset remains
+    assert cache.is_cached("ds")
+    listing = {e["dataset"]: e for e in cache.ls()}
+    assert listing["ds"]["state"] == "cached"
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    sizes=st.lists(st.integers(1, 30), min_size=1, max_size=8),
+    capacity=st.integers(500, 5000),
+)
+def test_property_capacity_never_exceeded(sizes, capacity):
+    """Invariant: aggregate stripe bytes never exceed aggregate capacity,
+    and every cached dataset is complete (all chunks placed)."""
+    clock, topo, store, cache = _cluster(capacity=capacity)
+    for i, items in enumerate(sizes):
+        spec = _spec(f"ds{i}", items=items, item_bytes=100)
+        cache.register(spec)
+        try:
+            cache.admit(f"ds{i}", topo.nodes[:4])
+            cache.mark_filled(f"ds{i}")
+            cache.touch(f"ds{i}")
+        except CacheFullError:
+            pass
+        total = sum(store.bytes_on_node(n.node_id) for n in topo.nodes[:4])
+        assert total <= capacity * 4
+        for man in store.manifests.values():
+            assert len(man.chunk_nodes) == man.n_chunks
+            assert all(len(r) >= 1 for r in man.chunk_nodes)

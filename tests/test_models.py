@@ -1,0 +1,138 @@
+"""Per-arch smoke tests (reduced configs) + decode/prefill consistency."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS
+from repro.models import build_model, params as PM
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _batch(cfg, B=2, S=128, seed=0):
+    rng = np.random.default_rng(seed)
+    batch = {
+        "tokens": jnp.asarray(rng.integers(0, cfg.vocab, (B, S)), jnp.int32),
+        "labels": jnp.asarray(rng.integers(0, cfg.vocab, (B, S)), jnp.int32),
+    }
+    if cfg.family == "encdec":
+        batch["enc_emb"] = jnp.asarray(rng.normal(size=(B, S, cfg.d_model)), jnp.float32)
+    if cfg.family == "vlm":
+        batch["img_emb"] = jnp.asarray(
+            rng.normal(size=(B, cfg.vlm.n_image_tokens, cfg.d_model)), jnp.float32
+        )
+    return batch
+
+
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+def test_arch_smoke_train_step(arch):
+    """One forward/train step on CPU: finite loss, correct shapes."""
+    cfg = ARCHS[arch].smoke()
+    model = build_model(cfg, mesh=None)
+    params = PM.materialize(model.layout(), KEY, cfg.dtype)
+    loss, metrics = jax.jit(model.loss)(params, _batch(cfg))
+    assert loss.shape == ()
+    assert bool(jnp.isfinite(loss)), arch
+    assert float(loss) > 0
+
+
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+def test_arch_smoke_decode_step(arch):
+    cfg = ARCHS[arch].smoke()
+    model = build_model(cfg, mesh=None)
+    params = PM.materialize(model.layout(), KEY, cfg.dtype)
+    B, S = 2, 64
+    if cfg.family == "encdec":
+        lay = model.cache_layout(B, S, 32)
+    else:
+        lay = model.cache_layout(B, S)
+    cache = PM.materialize(lay, KEY, cfg.dtype)
+    batch = {
+        "tokens": jnp.zeros((B, 1), jnp.int32),
+        "cache": cache,
+        "index": jnp.asarray(3, jnp.int32),
+    }
+    logits, new_cache = jax.jit(model.decode_step)(params, batch)
+    assert logits.shape == (B, 1, cfg.vocab)
+    assert bool(jnp.isfinite(logits).all()), arch
+    assert jax.tree.structure(new_cache) == jax.tree.structure(cache)
+
+
+@pytest.mark.parametrize("arch", ["qwen3-4b", "qwen1.5-0.5b", "xlstm-1.3b"])
+def test_decode_matches_prefill_logits(arch):
+    """Feeding tokens one-by-one through decode reproduces the prefill
+    logits at the last position (cache correctness end-to-end)."""
+    cfg = ARCHS[arch].smoke()
+    model = build_model(cfg, mesh=None)
+    params = PM.materialize(model.layout(), KEY, cfg.dtype)
+    B, S = 1, 16
+    rng = np.random.default_rng(7)
+    toks = rng.integers(0, cfg.vocab, (B, S), dtype=np.int32)
+
+    want = jax.jit(model.prefill)(params, {"tokens": jnp.asarray(toks)})
+
+    lay = model.cache_layout(B, S + 4)
+    cache = PM.materialize(lay, KEY, cfg.dtype)
+    decode = jax.jit(model.decode_step)
+    logits = None
+    for t in range(S):
+        logits, cache = decode(
+            params,
+            {"tokens": jnp.asarray(toks[:, t : t + 1]), "cache": cache,
+             "index": jnp.asarray(t, jnp.int32)},
+        )
+    np.testing.assert_allclose(
+        np.asarray(logits, np.float32), np.asarray(want, np.float32), rtol=2e-3, atol=2e-3
+    )
+
+
+def test_moe_aux_loss_nonzero():
+    cfg = ARCHS["mixtral-8x7b"].smoke()
+    model = build_model(cfg, mesh=None)
+    params = PM.materialize(model.layout(), KEY, cfg.dtype)
+    _loss, metrics = jax.jit(model.loss)(params, _batch(cfg))
+    assert float(metrics["aux"]) > 0
+
+
+def test_mla_cache_is_latent_sized():
+    """DeepSeek MLA decode cache stores the latent, not per-head KV."""
+    cfg = ARCHS["deepseek-v2-lite-16b"].smoke()
+    model = build_model(cfg, mesh=None)
+    lay = model.cache_layout(2, 64)
+    leaves = jax.tree.leaves(lay, is_leaf=lambda x: isinstance(x, PM.ParamInfo))
+    dims = {info.shape[-1] for info in leaves}
+    assert dims == {cfg.mla.kv_lora_rank, cfg.mla.qk_rope_dim}
+
+
+def test_sliding_window_cache_is_window_sized():
+    cfg = ARCHS["mixtral-8x7b"].smoke()           # window=64 in smoke
+    model = build_model(cfg, mesh=None)
+    lay = model.cache_layout(2, 4096)
+    leaves = jax.tree.leaves(lay, is_leaf=lambda x: isinstance(x, PM.ParamInfo))
+    # leaves are stacked over layers; the seq dim is second-from-last
+    assert all(info.shape[-2] == cfg.sliding_window for info in leaves)
+
+
+def test_vlm_sees_image_prefix():
+    """Different image embeddings change the loss (frontend wired in)."""
+    cfg = ARCHS["internvl2-2b"].smoke()
+    model = build_model(cfg, mesh=None)
+    params = PM.materialize(model.layout(), KEY, cfg.dtype)
+    b1 = _batch(cfg)
+    b2 = dict(b1, img_emb=b1["img_emb"] + 1.0)
+    l1, _ = jax.jit(model.loss)(params, b1)
+    l2, _ = jax.jit(model.loss)(params, b2)
+    assert abs(float(l1) - float(l2)) > 1e-6
+
+
+def test_whisper_encoder_affects_decoder():
+    cfg = ARCHS["whisper-large-v3"].smoke()
+    model = build_model(cfg, mesh=None)
+    params = PM.materialize(model.layout(), KEY, cfg.dtype)
+    b1 = _batch(cfg)
+    b2 = dict(b1, enc_emb=b1["enc_emb"] * 2.0)
+    l1, _ = jax.jit(model.loss)(params, b1)
+    l2, _ = jax.jit(model.loss)(params, b2)
+    assert abs(float(l1) - float(l2)) > 1e-6

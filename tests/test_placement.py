@@ -1,0 +1,80 @@
+"""Placement engine: co-scheduling, locality, inventory, Table-5 math."""
+
+import pytest
+
+from repro.core import (
+    CacheManager,
+    DatasetSpec,
+    JobSpec,
+    PlacementEngine,
+    SimClock,
+    StripeStore,
+    Topology,
+    TopologyConfig,
+)
+from repro.core.topology import Gb
+
+
+def _cluster(nodes_per_rack=4, racks=4):
+    clock = SimClock()
+    topo = Topology(TopologyConfig(nodes_per_rack=nodes_per_rack, racks_per_pod=racks), clock)
+    store = StripeStore(topo)
+    cache = CacheManager(topo, store, clock, capacity_per_node=1e9)
+    return topo, cache, PlacementEngine(topo, cache)
+
+
+def test_jobs_land_on_cache_nodes_first():
+    topo, cache, engine = _cluster()
+    cache.register(DatasetSpec("ds", "nfs://ds", 100, 1000))
+    cache_nodes = topo.rack_nodes(2)
+    cache.admit("ds", cache_nodes)
+    cache.mark_filled("ds")
+    pl = engine.place(JobSpec("j1", "ds", n_nodes=2))
+    assert all(n.rack_id == 2 for n in pl.compute_nodes)
+    assert not pl.misplaced
+
+
+def test_rack_local_fallback_when_nodes_busy():
+    topo, cache, engine = _cluster()
+    cache.register(DatasetSpec("ds", "nfs://ds", 100, 1000))
+    cache.admit("ds", topo.rack_nodes(0))
+    cache.mark_filled("ds")
+    # occupy all GPUs on the cache nodes
+    for n in topo.rack_nodes(0):
+        engine.inventory.take(n, 4)
+    pl = engine.place(JobSpec("j2", "ds", n_nodes=1))
+    # next-best is distance SAME_POD (all racks share the pod here)
+    assert pl.compute_nodes[0].rack_id != 0 or pl.misplaced is False
+
+
+def test_inventory_exhaustion_raises():
+    topo, cache, engine = _cluster(nodes_per_rack=1, racks=1)
+    cache.register(DatasetSpec("ds", "nfs://ds", 10, 10))
+    engine.place(JobSpec("a", "ds", n_nodes=1))
+    with pytest.raises(RuntimeError):
+        engine.place(JobSpec("b", "ds", n_nodes=1))
+
+
+def test_release_returns_gpus():
+    topo, cache, engine = _cluster(nodes_per_rack=1, racks=1)
+    cache.register(DatasetSpec("ds", "nfs://ds", 10, 10))
+    pl = engine.place(JobSpec("a", "ds", n_nodes=1))
+    engine.release(pl)
+    engine.place(JobSpec("b", "ds", n_nodes=1))   # no raise
+
+
+def test_choose_cache_nodes_prefers_near_and_empty():
+    topo, cache, engine = _cluster()
+    near = topo.rack_nodes(1)[:2]
+    picked = engine.choose_cache_nodes(1.5e9, near=near)
+    assert picked
+    assert picked[0].rack_id == 1
+
+
+def test_table5_uplink_projection():
+    """Paper Table 5: 24 jobs, 20/40/60/80% misplaced -> 5/9/13/17% uplink."""
+    topo, cache, engine = _cluster()
+    expect = {0.2: 0.05, 0.4: 0.09, 0.6: 0.13, 0.8: 0.17}
+    for frac, want in expect.items():
+        got = engine.uplink_usage(24, frac, per_job_bw=2.67 * Gb)
+        assert abs(got - want) < 0.005, (frac, got, want)

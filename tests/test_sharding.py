@@ -1,0 +1,79 @@
+"""Small-mesh sharding tests: run lower+compile in a subprocess with 8
+virtual devices (the 512-device override belongs to the dry-run ONLY)."""
+
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+_SCRIPT = textwrap.dedent(
+    """
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import json
+    import jax, jax.numpy as jnp
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.configs import ARCHS, ShapeConfig
+    from repro.models import build_model, params as PM
+    from repro.models.registry import input_specs
+    from repro.train.step import make_train_step
+    from repro.train.optimizer import AdamWConfig, opt_state_specs
+    from repro.launch.dryrun import abstract_opt_state, _named
+    from repro.launch.mesh import make_test_mesh
+
+    arch = %(arch)r
+    mesh = make_test_mesh(data=2, model=2, pods=2)
+    cfg = ARCHS[arch].smoke()
+    shape = ShapeConfig("t", 128, 8, %(kind)r)
+    model = build_model(cfg, mesh=mesh, model_axis=2)
+    layout = model.layout()
+    params_abs = PM.abstract(layout, cfg.dtype)
+    param_sh = _named(mesh, PM.specs(layout))
+    batch_abs, batch_spec = input_specs(cfg, shape, mesh=mesh, model=model)
+    batch_sh = _named(mesh, batch_spec)
+    if shape.kind == "train":
+        opt_cfg = AdamWConfig()
+        step = make_train_step(model, opt_cfg)
+        opt_abs = abstract_opt_state(layout, opt_cfg)
+        opt_sh = _named(mesh, opt_state_specs(layout, mesh, opt_cfg))
+        c = jax.jit(step, in_shardings=(param_sh, opt_sh, batch_sh),
+                    out_shardings=(param_sh, opt_sh, None),
+                    donate_argnums=(0, 1)).lower(params_abs, opt_abs, batch_abs).compile()
+    else:
+        from repro.models.registry import step_fn
+        c = jax.jit(step_fn(cfg, shape, model=model),
+                    in_shardings=(param_sh, batch_sh)).lower(params_abs, batch_abs).compile()
+    cost = c.cost_analysis() or {}
+    print(json.dumps({"ok": True, "flops": cost.get("flops", 0.0)}))
+    """
+)
+
+
+def _run(arch: str, kind: str):
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    proc = subprocess.run(
+        [sys.executable, "-c", _SCRIPT % {"arch": arch, "kind": kind}],
+        capture_output=True, text=True, timeout=600, env=env,
+    )
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    out = json.loads(proc.stdout.strip().splitlines()[-1])
+    assert out["ok"]
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("arch", ["qwen1.5-0.5b", "mixtral-8x7b", "xlstm-1.3b"])
+def test_multipod_mesh_train_compiles(arch):
+    """(pod=2, data=2, model=2) mesh: train step lowers + compiles with the
+    production sharding rules on reduced configs."""
+    _run(arch, "train")
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("arch", ["qwen1.5-0.5b", "hymba-1.5b"])
+def test_multipod_mesh_decode_compiles(arch):
+    _run(arch, "decode")

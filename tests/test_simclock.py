@@ -1,0 +1,104 @@
+"""Unit tests for the discrete-event flow kernel."""
+
+import pytest
+
+from repro.core.simclock import Resource, SimClock
+
+
+def test_single_flow_timing():
+    clock = SimClock()
+    r = Resource("r", 100.0)
+    done = clock.transfer([r], 1000.0)
+    clock.run()
+    assert done.fired
+    assert abs(clock.now - 10.0) < 1e-9
+
+
+def test_fair_sharing_two_flows():
+    """Two equal flows on one resource each get half the bandwidth."""
+    clock = SimClock()
+    r = Resource("r", 100.0)
+    t_done = {}
+    for name in ("a", "b"):
+        clock.transfer([r], 500.0).on_fire(lambda _v, n=name: t_done.setdefault(n, clock.now))
+    clock.run()
+    assert abs(t_done["a"] - 10.0) < 1e-6
+    assert abs(t_done["b"] - 10.0) < 1e-6
+
+
+def test_work_conservation_unequal_flows():
+    """Small flow finishes early, big flow then speeds up: total = work/bw."""
+    clock = SimClock()
+    r = Resource("r", 100.0)
+    t = {}
+    clock.transfer([r], 200.0).on_fire(lambda _v: t.setdefault("small", clock.now))
+    clock.transfer([r], 800.0).on_fire(lambda _v: t.setdefault("big", clock.now))
+    clock.run()
+    assert abs(t["small"] - 4.0) < 1e-6          # 200 at 50/s
+    assert abs(t["big"] - 10.0) < 1e-6           # total work 1000 at 100/s
+
+
+def test_bottleneck_path():
+    """A flow crossing two resources runs at the min bandwidth."""
+    clock = SimClock()
+    fast, slow = Resource("fast", 1000.0), Resource("slow", 10.0)
+    done = clock.transfer([fast, slow], 100.0)
+    clock.run()
+    assert abs(clock.now - 10.0) < 1e-6
+
+
+def test_max_min_fairness_cross_traffic():
+    """Flow A (shared link) vs flow B (dedicated): A limited by its own
+    bottleneck, B picks up the slack on the shared resource."""
+    clock = SimClock()
+    shared = Resource("shared", 100.0)
+    narrow = Resource("narrow", 20.0)
+    t = {}
+    clock.transfer([shared, narrow], 200.0).on_fire(lambda _v: t.setdefault("A", clock.now))
+    clock.transfer([shared], 800.0).on_fire(lambda _v: t.setdefault("B", clock.now))
+    clock.run()
+    assert abs(t["A"] - 10.0) < 1e-6             # 20/s on narrow
+    assert abs(t["B"] - 10.0) < 1e-6             # 80/s on shared
+
+
+def test_process_sleep_and_transfer():
+    clock = SimClock()
+    r = Resource("r", 10.0)
+    log = []
+
+    def proc():
+        yield clock.sleep(5.0)
+        log.append(("woke", clock.now))
+        yield clock.transfer([r], 100.0)
+        log.append(("moved", clock.now))
+        return 42
+
+    done = clock.process(proc())
+    clock.run()
+    assert done.value == 42
+    assert log[0] == ("woke", 5.0)
+    assert abs(log[1][1] - 15.0) < 1e-9
+
+
+def test_all_of_join():
+    clock = SimClock()
+    r1, r2 = Resource("a", 10.0), Resource("b", 100.0)
+    ev = clock.all_of([clock.transfer([r1], 100.0), clock.transfer([r2], 100.0)])
+    clock.run()
+    assert ev.fired
+    assert abs(clock.now - 10.0) < 1e-9
+
+
+def test_zero_byte_transfer_fires_immediately():
+    clock = SimClock()
+    ev = clock.transfer([Resource("r", 1.0)], 0.0)
+    assert ev.fired
+
+
+def test_utilization_accounting():
+    clock = SimClock()
+    r = Resource("r", 100.0)
+    clock.transfer([r], 500.0)
+    clock.run()
+    assert abs(r.busy_bytes - 500.0) < 1.0
+    assert abs(r.utilization(clock.now) - 1.0) < 0.01

@@ -1,0 +1,111 @@
+"""End-to-end behaviour tests: the paper's headline claims, reproduced.
+
+These run the full discrete-event reproduction at paper scale (144 GB
+ImageNet workload model, 4 jobs x 4 GPUs) and assert the Table 3 / Fig 3
+bands within tolerance.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import PAPER, WorkloadCalibration, run_scenario
+
+
+@pytest.fixture(scope="module")
+def three_epoch_runs():
+    out = {}
+    for backend in ("rem", "nvme", "hoard"):
+        out[backend] = run_scenario(backend, epochs=3, n_jobs=4)
+    return out
+
+
+def _totals(res, n_epochs):
+    su = sum(j.startup_s for j in res.jobs) / len(res.jobs)
+    e = res.mean_epoch_times
+    return su + e[0] + (n_epochs - 1) * e[-1]
+
+
+def test_epoch1_hoard_tracks_fill_path(three_epoch_runs):
+    """Fig 3: Hoard's first epoch runs at the AFM fill rate (~1682 s)."""
+    e1 = three_epoch_runs["hoard"].mean_epoch_times[0]
+    assert abs(e1 - 1681.6) / 1681.6 < 0.03
+
+
+def test_steady_hoard_epoch_near_local(three_epoch_runs):
+    """Fig 3: epoch 2+ at stripe speed (~413 s), within 3%."""
+    e = three_epoch_runs["hoard"].mean_epoch_times
+    assert abs(e[-1] - 412.7) / 412.7 < 0.03
+
+
+def test_table3_speedups(three_epoch_runs):
+    """Table 3: Hoard 0.93/1.98/2.07/2.10x, NVMe 2.28..2.32x."""
+    expect_hoard = {2: 0.93, 30: 1.98, 60: 2.07, 90: 2.10}
+    expect_nvme = {2: 2.28, 30: 2.30, 60: 2.32, 90: 2.32}
+    for n, want in expect_hoard.items():
+        got = _totals(three_epoch_runs["rem"], n) / _totals(three_epoch_runs["hoard"], n)
+        assert abs(got - want) / want < 0.03, (n, got, want)
+    for n, want in expect_nvme.items():
+        got = _totals(three_epoch_runs["rem"], n) / _totals(three_epoch_runs["nvme"], n)
+        assert abs(got - want) / want < 0.03, (n, got, want)
+
+
+def test_network_bytes_match_dataset_epochs(three_epoch_runs):
+    """Table 4: total bytes served == dataset x epochs for REM."""
+    res = three_epoch_runs["rem"]
+    total = res.metrics.total("remote_bytes") + res.metrics.total("ram_bytes")
+    expect = 3 * PAPER.dataset_bytes * 4            # 3 epochs x 4 jobs
+    assert abs(total - expect) / expect < 0.01
+
+
+def test_hoard_remote_traffic_only_first_epoch(three_epoch_runs):
+    """Hoard touches the remote store only while filling (epoch 1)."""
+    res = three_epoch_runs["hoard"]
+    remote = res.metrics.total("remote_bytes")
+    assert abs(remote - 4 * PAPER.dataset_bytes) / (4 * PAPER.dataset_bytes) < 0.01
+    assert res.metrics.total("stripe_bytes") > 0
+
+
+def test_mdr_insensitivity_of_hoard():
+    """Fig 4: Hoard steady epochs barely move across MDR; REM degrades."""
+    h_lo = run_scenario("hoard", epochs=2, n_jobs=1, mdr=0.25).mean_epoch_times[-1]
+    h_hi = run_scenario("hoard", epochs=2, n_jobs=1, mdr=0.75).mean_epoch_times[-1]
+    # "almost completely agnostic": <10% across a 3x MDR range (the GPFS
+    # client CPU binds; only the miss-path data-move cost moves slightly)
+    assert abs(h_lo - h_hi) / h_hi < 0.10
+    r_lo = run_scenario("rem", epochs=2, n_jobs=1, mdr=0.25).mean_epoch_times[-1]
+    r_hi = run_scenario("rem", epochs=2, n_jobs=1, mdr=1.2).mean_epoch_times[-1]
+    assert r_lo > r_hi * 1.5
+
+
+def test_mdr_above_one_converges_to_gpu_bound():
+    """Fig 4: MDR > 1.1 -> all three paths hit the GPU ceiling epoch 2+."""
+    times = {
+        b: run_scenario(b, epochs=2, n_jobs=1, mdr=1.2).mean_epoch_times[-1]
+        for b in ("rem", "nvme", "hoard")
+    }
+    gpu_epoch = PAPER.dataset_bytes / PAPER.gpu_bw
+    for b, t in times.items():
+        assert abs(t - gpu_epoch) / gpu_epoch < 0.05, (b, t, gpu_epoch)
+
+
+def test_bandwidth_sweep_only_hits_hoard_fill():
+    """Fig 5: halving remote BW halves REM throughput; Hoard steady epochs
+    are unaffected (only epoch 1 stretches)."""
+    full = run_scenario("hoard", epochs=2, n_jobs=1, remote_bw_scale=1.0)
+    half = run_scenario("hoard", epochs=2, n_jobs=1, remote_bw_scale=0.5)
+    assert half.mean_epoch_times[0] > 1.9 * full.mean_epoch_times[0]
+    assert abs(half.mean_epoch_times[-1] - full.mean_epoch_times[-1]) / full.mean_epoch_times[-1] < 0.02
+
+    r_full = run_scenario("rem", epochs=1, n_jobs=1, remote_bw_scale=1.0).mean_epoch_times[0]
+    r_half = run_scenario("rem", epochs=1, n_jobs=1, remote_bw_scale=0.5).mean_epoch_times[0]
+    assert r_half > 1.9 * r_full
+
+
+def test_fps_timeline_shows_epoch_transition(three_epoch_runs):
+    """Fig 3's shape: Hoard fps jumps ~4x at the epoch-1/2 boundary."""
+    jm = three_epoch_runs["hoard"].metrics.job("job0")
+    steps, fps = jm.fps_curve(smooth=25)
+    spe = len(steps) // 3
+    early = np.median(fps[spe // 4 : spe // 2])
+    late = np.median(fps[spe + spe // 4 : 2 * spe])
+    assert late > 3.0 * early

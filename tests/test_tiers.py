@@ -1,0 +1,79 @@
+"""LRU stack-distance model vs exact LRU (incl. hypothesis sweeps)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.tiers import LRUCache, LRUStackModel, buffer_cache_items
+
+
+def _epoch_orders(n, epochs, seed=0):
+    rng = np.random.default_rng(seed)
+    return [rng.permutation(n) for _ in range(epochs)]
+
+
+def test_model_matches_exact_lru_aggregate():
+    """Aggregate hit rate of the vectorised model ~= exact LRU."""
+    n, cap = 2000, 1000
+    model = LRUStackModel(n, cap)
+    exact = LRUCache(cap)
+    m_hits = e_hits = total = 0
+    for epoch, order in enumerate(_epoch_orders(n, 4)):
+        hits = model.access_epoch_batch(order, epoch, np.arange(n))
+        m_hits += hits.sum()
+        for item in order:
+            e_hits += exact.access(int(item))
+        total += n
+    m_rate, e_rate = m_hits / total, e_hits / total
+    assert abs(m_rate - e_rate) < 0.03, (m_rate, e_rate)
+
+
+def test_capacity_above_dataset_gives_full_hits_after_epoch1():
+    n = 500
+    model = LRUStackModel(n, int(1.2 * n))
+    orders = _epoch_orders(n, 3, seed=1)
+    h0 = model.access_epoch_batch(orders[0], 0, np.arange(n))
+    h1 = model.access_epoch_batch(orders[1], 1, np.arange(n))
+    assert h0.sum() == 0                      # cold
+    assert h1.all()                            # everything resident
+
+
+def test_zero_capacity_never_hits():
+    n = 100
+    model = LRUStackModel(n, 0)
+    for e, order in enumerate(_epoch_orders(n, 2)):
+        assert model.access_epoch_batch(order, e, np.arange(n)).sum() == 0
+
+
+def test_steady_hit_rate_analytic():
+    """f=0.5 -> h = (1 - ln 2)/2 ~= 0.1534 (calibration derivation)."""
+    n = 200_000
+    model = LRUStackModel(n, n // 2)
+    orders = _epoch_orders(n, 3, seed=2)
+    for e, order in enumerate(orders):
+        hits = model.access_epoch_batch(order, e, np.arange(n))
+    assert abs(hits.mean() - 0.1534) < 0.01
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n=st.integers(50, 400),
+    f=st.floats(0.1, 1.5),
+    seed=st.integers(0, 1000),
+)
+def test_property_model_vs_exact(n, f, seed):
+    """Property: model hit rate tracks exact LRU within 12% absolute for any
+    capacity fraction and dataset size (epoch-permutation workloads)."""
+    cap = buffer_cache_items(f, n)
+    model = LRUStackModel(n, cap)
+    exact = LRUCache(cap)
+    m_hits = e_hits = total = 0
+    rng = np.random.default_rng(seed)
+    for epoch in range(3):
+        order = rng.permutation(n)
+        m_hits += model.access_epoch_batch(order, epoch, np.arange(n)).sum()
+        for item in order:
+            e_hits += exact.access(int(item))
+        total += n
+    assert abs(m_hits / total - e_hits / total) < 0.12
