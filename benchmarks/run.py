@@ -17,6 +17,7 @@ def main() -> None:
     args = ap.parse_args()
 
     from . import paper_tables
+    from .coldstart import coldstart_rows
     from .ingest_demand import ingest_rows
     from .roofline_table import roofline_rows
 
@@ -29,6 +30,7 @@ def main() -> None:
         ("table4", paper_tables.table4_network),
         ("table5", paper_tables.table5_uplink),
         ("coplacement", paper_tables.misplaced_job_scenario),
+        ("coldstart", coldstart_rows),
         ("roofline", roofline_rows),
         ("ingest", ingest_rows),
     ]

@@ -3,7 +3,11 @@
 Ten sequential jobs share one dataset.  Without Hoard each job re-streams
 the data from NFS; with Hoard the first job fills the stripes and the other
 nine ride warm cache — dataset lifecycle is decoupled from job lifecycle
-(Requirement 2).
+(Requirement 2).  Every sweep starts from a COLD cache here, so the Hoard
+variants show both fill models: the paper's per-job AFM miss path, and the
+on-demand fill data plane (clairvoyant prefetch + shared read-through,
+``core/prefetch.py``) which warms the stripes once during trial 0's first
+epoch.
 
     PYTHONPATH=src python examples/hyperparam_sweep.py
 """
@@ -11,9 +15,11 @@ nine ride warm cache — dataset lifecycle is decoupled from job lifecycle
 from repro.core import (
     CacheManager,
     DatasetSpec,
+    FillTracker,
     HoardBackend,
     HoardLoader,
     PAPER,
+    PrefetchScheduler,
     RemoteBackend,
     TrainingJob,
     build_cluster,
@@ -27,18 +33,27 @@ def sweep(backend_name: str) -> float:
     clock, topo, store, cache, engine = build_cluster()
     spec = DatasetSpec("imagenet", "nfs://store/imagenet", PAPER.dataset_items, int(PAPER.item_bytes))
     cache.register(spec)
-    if backend_name == "hoard":
-        cache.admit("imagenet", topo.nodes[:4])
+    ondemand = backend_name == "hoard-ondemand"
+    tracker = None
+    if backend_name.startswith("hoard"):
+        cache.admit("imagenet", topo.nodes[:4], on_demand=ondemand)
+        if ondemand:
+            tracker = FillTracker(clock, topo, cache, "imagenet")
 
     total = 0.0
     # jobs run sequentially: trial i+1 starts after trial i (think-time loop)
     for trial in range(N_JOBS):
         node = topo.nodes[trial % 4]
-        if backend_name == "hoard":
-            be = HoardBackend(clock, topo, node, PAPER, cache=cache, dataset_id="imagenet")
+        if backend_name.startswith("hoard"):
+            scheduler = PrefetchScheduler(tracker) if ondemand and not cache.is_cached("imagenet") else None
+            be = HoardBackend(clock, topo, node, PAPER, cache=cache, dataset_id="imagenet",
+                              fill_plane=tracker, prefetcher=scheduler)
         else:
+            scheduler = None
             be = RemoteBackend(clock, topo, node, PAPER)
         loader = HoardLoader(be, PAPER, epochs=EPOCHS, seed=trial)
+        if scheduler is not None:
+            scheduler.start(loader.plan.order(0))   # clairvoyant epoch-1 schedule
         job = TrainingJob(f"trial{trial}", clock, loader, PAPER)
         done = job.start()
         clock.run()
@@ -48,8 +63,11 @@ def sweep(backend_name: str) -> float:
 
 rem_total = sweep("rem")
 hoard_total = sweep("hoard")
-print(f"10-trial sweep, {EPOCHS} epochs each")
-print(f"  REM   : {rem_total/3600:6.2f} h  (every trial streams from NFS)")
-print(f"  Hoard : {hoard_total/3600:6.2f} h  (trial 0 fills, 9 trials ride warm stripes)")
-print(f"  sweep speedup: {rem_total/hoard_total:.2f}x  — vs 0.93x for a single 2-epoch run: "
-      f"the one-off fill amortises across trials (Requirement 2)")
+ondemand_total = sweep("hoard-ondemand")
+print(f"10-trial sweep, {EPOCHS} epochs each, cold cache at trial 0")
+print(f"  REM            : {rem_total/3600:6.2f} h  (every trial streams from NFS)")
+print(f"  Hoard (AFM)    : {hoard_total/3600:6.2f} h  (trial 0 fills at the AFM miss rate)")
+print(f"  Hoard (ondemand): {ondemand_total/3600:5.2f} h  (prefetch-scheduled fill overlaps trial 0)")
+print(f"  sweep speedup: {rem_total/hoard_total:.2f}x AFM, {rem_total/ondemand_total:.2f}x on-demand "
+      f"— vs 0.93x for a single 2-epoch AFM run: the one-off fill amortises "
+      f"across trials (Requirement 2), and the on-demand plane shrinks it")

@@ -1,0 +1,1 @@
+"""Optional-dependency compatibility shims (see hypothesis_fallback)."""

@@ -1,0 +1,133 @@
+"""Minimal, deterministic stand-in for ``hypothesis`` when it is absent.
+
+The test suite uses a small, bounded subset of the Hypothesis API
+(``@settings``, ``@given``, and the ``integers``/``floats``/``lists``/
+``booleans``/``sampled_from`` strategies).  Some deployment containers ship
+without the real package and new dependencies cannot always be installed, so
+``tests/conftest.py`` calls :func:`install` to register this module under the
+``hypothesis`` import name *only when the real package is missing* — when
+Hypothesis is installed it is always preferred (shrinking, the example
+database and the full strategy algebra are strictly better).
+
+The fallback runs each property ``max_examples`` times with values drawn from
+a PRNG seeded by the test's qualified name, so failures reproduce across
+runs.  The first two examples pin the strategy bounds (min then max) to keep
+some of Hypothesis's edge-case bias.
+"""
+
+from __future__ import annotations
+
+import sys
+import types
+import zlib
+from typing import Any, Callable
+
+import numpy as np
+
+_DEFAULT_MAX_EXAMPLES = 20
+
+
+class _Strategy:
+    """A bounded value source: ``draw(rng, index)`` -> example value."""
+
+    def __init__(self, draw: Callable[[np.random.Generator, int], Any]):
+        self._draw = draw
+
+    def draw(self, rng: np.random.Generator, index: int) -> Any:
+        return self._draw(rng, index)
+
+
+def integers(min_value: int, max_value: int) -> _Strategy:
+    def draw(rng, index):
+        if index == 0:
+            return int(min_value)
+        if index == 1:
+            return int(max_value)
+        return int(rng.integers(min_value, max_value + 1))
+
+    return _Strategy(draw)
+
+
+def floats(min_value: float, max_value: float, **_kw) -> _Strategy:
+    def draw(rng, index):
+        if index == 0:
+            return float(min_value)
+        if index == 1:
+            return float(max_value)
+        return float(rng.uniform(min_value, max_value))
+
+    return _Strategy(draw)
+
+
+def booleans() -> _Strategy:
+    return _Strategy(lambda rng, index: bool(index % 2) if index < 2 else bool(rng.integers(2)))
+
+
+def sampled_from(options) -> _Strategy:
+    seq = list(options)
+    return _Strategy(lambda rng, index: seq[int(rng.integers(len(seq)))])
+
+
+def lists(elements: _Strategy, *, min_size: int = 0, max_size: int = 10) -> _Strategy:
+    def draw(rng, index):
+        size = min_size if index == 0 else int(rng.integers(min_size, max_size + 1))
+        return [elements.draw(rng, i + 2) for i in range(size)]
+
+    return _Strategy(draw)
+
+
+def settings(max_examples: int = _DEFAULT_MAX_EXAMPLES, **_ignored):
+    """Decorator recording ``max_examples``; other knobs are no-ops here."""
+
+    def deco(fn):
+        fn._fallback_max_examples = int(max_examples)
+        return fn
+
+    return deco
+
+
+def given(**strategies: _Strategy):
+    """Run the property ``max_examples`` times with seeded random draws."""
+
+    def deco(fn):
+        # NOTE: no functools.wraps — pytest follows ``__wrapped__`` to the
+        # original signature and would treat the property args as fixtures
+        def wrapper(*args, **kwargs):
+            n = getattr(wrapper, "_fallback_max_examples", _DEFAULT_MAX_EXAMPLES)
+            seed = zlib.crc32(f"{fn.__module__}.{fn.__qualname__}".encode())
+            for index in range(n):
+                rng = np.random.default_rng((seed, index))
+                drawn = {name: s.draw(rng, index) for name, s in strategies.items()}
+                try:
+                    fn(*args, **kwargs, **drawn)
+                except Exception as err:
+                    raise AssertionError(
+                        f"falsifying example (fallback engine, run {index}): {drawn!r}"
+                    ) from err
+
+        for attr in ("__name__", "__qualname__", "__doc__", "__module__"):
+            setattr(wrapper, attr, getattr(fn, attr))
+        wrapper._fallback_max_examples = getattr(fn, "_fallback_max_examples", None) or _DEFAULT_MAX_EXAMPLES
+        return wrapper
+
+    return deco
+
+
+def install() -> None:
+    """Register this module as ``hypothesis`` if the real one is missing."""
+    if "hypothesis" in sys.modules:
+        return
+    try:
+        import hypothesis  # noqa: F401  (real package wins)
+        return
+    except ModuleNotFoundError:
+        pass
+    mod = types.ModuleType("hypothesis")
+    mod.given = given
+    mod.settings = settings
+    st = types.ModuleType("hypothesis.strategies")
+    for name in ("integers", "floats", "booleans", "lists", "sampled_from"):
+        setattr(st, name, globals()[name])
+    mod.strategies = st
+    sys.modules["hypothesis"] = mod
+    sys.modules["hypothesis.strategies"] = st

@@ -24,6 +24,7 @@ from .loader import (
 )
 from .metrics import ClusterMetrics, JobMetrics
 from .placement import JobSpec, Placement, PlacementEngine
+from .prefetch import FillTracker, PrefetchScheduler
 from .simclock import AllOf, Event, Resource, SimClock
 from .stripestore import ChunkCorruption, StripeError, StripeManifest, StripeStore
 from .tiers import LRUCache, LRUStackModel, PagePool, buffer_cache_items
@@ -32,10 +33,10 @@ from .topology import Node, Topology, TopologyConfig
 __all__ = [
     "AllOf", "CacheEntry", "CacheFullError", "CacheManager", "CacheState",
     "ChunkCorruption", "ClusterMetrics", "DatasetSpec", "Event", "EvictionPolicy",
-    "HoardBackend", "HoardLoader", "JobMetrics", "JobResult", "JobSpec",
-    "LRUCache", "LRUStackModel", "LocalCopyBackend", "Node", "PAPER", "PagePool",
-    "Placement", "PlacementEngine", "RemoteBackend", "Resource", "ScenarioResult",
-    "SimClock", "StripeError", "StripeManifest", "StripeStore", "Topology",
-    "TopologyConfig", "TrainingJob", "WorkloadCalibration", "buffer_cache_items",
-    "build_cluster", "run_scenario",
+    "FillTracker", "HoardBackend", "HoardLoader", "JobMetrics", "JobResult",
+    "JobSpec", "LRUCache", "LRUStackModel", "LocalCopyBackend", "Node", "PAPER",
+    "PagePool", "Placement", "PlacementEngine", "PrefetchScheduler",
+    "RemoteBackend", "Resource", "ScenarioResult", "SimClock", "StripeError",
+    "StripeManifest", "StripeStore", "Topology", "TopologyConfig", "TrainingJob",
+    "WorkloadCalibration", "buffer_cache_items", "build_cluster", "run_scenario",
 ]

@@ -126,12 +126,20 @@ class CacheManager:
         materialize: bool = False,
         payload=None,
         items_per_chunk: Optional[int] = None,
+        on_demand: bool = False,
     ) -> CacheEntry:
         """Reserve stripe space for the whole dataset (all-or-nothing).
 
         Evicts LRU datasets when the policy allows; raises ``CacheFullError``
         when MANUAL policy is active and space is insufficient (the paper's
         "wait for the user to evict" behaviour).
+
+        ``on_demand=True`` reserves the stripe layout with every chunk
+        *unfilled*: the dataset is warmed during the first epoch of the job
+        itself (remote read-through + clairvoyant prefetch, see
+        :mod:`repro.core.prefetch`) instead of by an up-front
+        :meth:`prefetch` pass.  Capacity accounting is identical — admission
+        stays whole-dataset either way.
         """
         entry = self._require(dataset_id)
         if entry.state in (CacheState.CACHED, CacheState.FILLING):
@@ -164,6 +172,7 @@ class CacheManager:
             replication=self.replication,
             materialize=materialize,
             payload=payload,
+            prefill=not on_demand,
         )
         entry.nodes = [n.node_id for n in nodes]
         entry.state = CacheState.FILLING
@@ -171,10 +180,31 @@ class CacheManager:
         return entry
 
     def mark_filled(self, dataset_id: str) -> None:
+        """Transition FILLING -> CACHED and wake waiters on ``fill_done``."""
         entry = self._require(dataset_id)
         entry.state = CacheState.CACHED
         if entry.fill_done is not None:
             entry.fill_done.set()
+
+    def fill_progress(self, dataset_id: str) -> float:
+        """Fraction of the dataset's chunks resident in the stripes [0, 1]."""
+        entry = self._require(dataset_id)
+        if entry.state is CacheState.CACHED:
+            return 1.0
+        if dataset_id not in self.store.manifests:
+            return 0.0
+        return self.store.filled_fraction(dataset_id)
+
+    def note_chunk_filled(self, dataset_id: str) -> None:
+        """Fill-plane callback after ``StripeStore.put_chunk``.
+
+        Flips the entry to CACHED the moment the last chunk lands, so an
+        on-demand fill converges to exactly the same steady state as an
+        up-front :meth:`prefetch`.
+        """
+        entry = self._require(dataset_id)
+        if entry.state is CacheState.FILLING and self.store.filled_fraction(dataset_id) >= 1.0:
+            self.mark_filled(dataset_id)
 
     def prefetch(self, dataset_id: str, nodes: Sequence[Node], **admit_kw) -> Event:
         """Asynchronously pull the dataset from remote into the stripes.

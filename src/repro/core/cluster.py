@@ -24,6 +24,7 @@ from .loader import (
 )
 from .metrics import ClusterMetrics
 from .placement import JobSpec, PlacementEngine
+from .prefetch import FillTracker, PrefetchScheduler
 from .simclock import SimClock
 from .stripestore import StripeStore
 from .topology import Topology, TopologyConfig
@@ -87,6 +88,8 @@ def run_scenario(
     cache_nodes: Optional[list[int]] = None,
     job_nodes: Optional[list[int]] = None,
     prefetch: bool = False,
+    fill: str = "afm",
+    prefetch_inflight: int = 8,
     seed: int = 0,
 ) -> ScenarioResult:
     """Run ``n_jobs`` identical jobs over the chosen data path.
@@ -96,6 +99,16 @@ def run_scenario(
     ``job_nodes`` override placement (Section 4.5 misplacement study);
     ``prefetch`` pre-populates the cache before the jobs start (the paper's
     asynchronous pre-fetch usage model).
+
+    ``fill`` selects the Hoard cold-start model (ignored for rem/nvme):
+
+    * ``"afm"``          — per-job AFM miss path, the paper's measured
+                           configuration (each cold job streams the dataset),
+    * ``"prepopulated"`` — cache warmed before t=0 (prefetch completed ahead
+                           of job submission; epoch 1 == steady state),
+    * ``"ondemand"``     — shared chunk-granular fill during epoch 1:
+                           clairvoyant prefetch scheduler + read-through
+                           (remote store touched once per chunk, cluster-wide).
     """
     topo_cfg = topo_cfg or TopologyConfig()
     if remote_bw_scale != 1.0:
@@ -120,8 +133,20 @@ def run_scenario(
         cache_nodes = [n.node_id for n in topo.nodes[:4]] if backend == "hoard" else []
     cnodes = [topo.node(i) for i in cache_nodes] if cache_nodes else []
 
+    if fill not in ("afm", "prepopulated", "ondemand"):
+        raise ValueError(f"unknown fill mode {fill!r}")
+    if prefetch and fill != "afm":
+        # prefetch books a whole-dataset transfer + mark_filled of its own;
+        # combining it with another fill model double-streams the dataset
+        raise ValueError(f"prefetch=True conflicts with fill={fill!r}")
+    tracker = scheduler = None
     if backend == "hoard":
-        cache.admit("imagenet", cnodes)
+        cache.admit("imagenet", cnodes, on_demand=(fill == "ondemand"))
+        if fill == "prepopulated":
+            cache.mark_filled("imagenet")
+        elif fill == "ondemand":
+            tracker = FillTracker(clock, topo, cache, "imagenet", metrics=metrics.job("fill:imagenet"))
+            scheduler = PrefetchScheduler(tracker, max_inflight=prefetch_inflight)
         if prefetch:
             done = cache.prefetch("imagenet", cnodes)
 
@@ -144,11 +169,19 @@ def run_scenario(
         elif backend == "nvme":
             be = LocalCopyBackend(clock, topo, node, cal, mdr=mdr, physical_copy=physical_copy, metrics=jm)
         elif backend == "hoard":
-            be = HoardBackend(clock, topo, node, cal, cache=cache, dataset_id="imagenet", mdr=mdr, metrics=jm)
+            be = HoardBackend(
+                clock, topo, node, cal, cache=cache, dataset_id="imagenet", mdr=mdr,
+                metrics=jm, fill_plane=tracker, prefetcher=scheduler,
+            )
         else:
             raise ValueError(f"unknown backend {backend!r}")
         loader = HoardLoader(be, cal, epochs=epochs, seed=seed + hash(jspec.job_id) % 1000)
         jobs.append(TrainingJob(jspec.job_id, clock, loader, cal, metrics=jm))
+
+    if scheduler is not None:
+        # clairvoyant: the epoch-1 permutation is known before the job runs
+        # (NoPFS); schedule fills in job0's first-touch order from t=0
+        scheduler.start(jobs[0].loader.plan.order(0))
 
     done_events = [job.start() for job in jobs]
     clock.run()

@@ -149,12 +149,27 @@ class LocalCopyBackend(_Backend):
 
 
 class HoardBackend(_Backend):
-    """Hoard: stripe-store reads + pagepool; AFM fill path on miss.
+    """Hoard: stripe-store reads + pagepool; two miss-path models.
 
-    First access to an uncached item takes the *fill* path: fetch from the
+    **AFM mode** (default, the paper's measured configuration): first access
+    to an uncached item takes the per-job *fill* path — fetch from the
     remote store, write back to the owning stripe node, serve the reader —
-    all booked at the calibrated AFM miss-service rate.  Subsequent accesses
-    are stripe reads or pagepool hits.
+    all booked at the calibrated AFM miss-service rate.  Each job fills its
+    own residency, so N cold jobs stream the dataset N times.
+
+    **On-demand mode** (``fill_plane`` given): the shared, chunk-granular
+    fill data plane of :mod:`repro.core.prefetch`.  Every item in a step is
+    classified tri-state:
+
+    1. *stripe hit* — its chunk is resident; read from the closest replica
+       (local NVMe, or a peer's stripe across the fabric),
+    2. *fill join* — its chunk's remote->stripe transfer is already in
+       flight (started by the prefetch scheduler or another job); wait for
+       it, then stripe-read,
+    3. *remote read-through* — start the chunk's fill now; the fetched chunk
+       is written into the StripeStore as a side effect, so the cold dataset
+       converges to fully cached during epoch 1 and the remote store is
+       touched exactly once per chunk cluster-wide.
 
     The GPFS client is modelled as a per-job *service-time* resource: every
     read (hit or miss — pagepool hits are served inside the client daemon)
@@ -178,6 +193,8 @@ class HoardBackend(_Backend):
         dataset_id: str,
         mdr: Optional[float] = None,
         metrics: Optional[JobMetrics] = None,
+        fill_plane=None,
+        prefetcher=None,
     ):
         super().__init__(clock, topology, node, cal)
         self.cache = cache
@@ -191,6 +208,11 @@ class HoardBackend(_Backend):
         # striping (chunk) granularity is a separate, placement-only concept
         self._resident = np.zeros(n, dtype=bool)
         self.metrics = metrics
+        # on-demand fill plane (prefetch.FillTracker) + optional scheduler
+        # to heartbeat consumer progress to (prefetch.PrefetchScheduler)
+        self.fill_plane = fill_plane
+        self.prefetcher = prefetcher
+        self._chunks_seen: Optional[np.ndarray] = None
 
     def _manifest(self):
         return self.cache.store.manifests[self.dataset_id]
@@ -201,14 +223,53 @@ class HoardBackend(_Backend):
             self._resident[:] = True
         self.cache.touch(self.dataset_id)
 
+    # ---------------------------------------------------------- flow booking
+    def _stripe_flows(self, items: np.ndarray) -> tuple[list[Event], float]:
+        """Book stripe reads (local NVMe or peer replica) for ``items``.
+
+        Network + source-disk flows per stripe source; rarely binding at
+        paper scale but mechanistically present (misplacement and
+        many-jobs-per-cache-node scenarios make them bind).
+        """
+        flows: list[Event] = []
+        if len(items) == 0:
+            return flows, 0.0
+        total = float(len(items)) * self.cal.item_bytes
+        src_nodes = self.cache.store.locate_batch(self.dataset_id, items, self.node)
+        for src_id in np.unique(src_nodes):
+            nbytes = float((src_nodes == src_id).sum()) * self.cal.item_bytes
+            src = self.topology.node(int(src_id))
+            path = [src.nvme, *self.topology.path(src, self.node)]
+            flows.append(self.clock.transfer(path, nbytes))
+            if self.metrics:
+                if src.node_id == self.node.node_id:
+                    self.metrics.count("local_stripe_bytes", nbytes)
+                else:
+                    self.metrics.count("peer_bytes", nbytes)
+                    self.metrics.count_link(src.node_id, self.node.node_id, nbytes)
+        if self.metrics:
+            self.metrics.count("stripe_bytes", total)
+        return flows, total
+
+    def _client_flow(self, served_bytes: float, stripe_bytes: float) -> Optional[Event]:
+        """GPFS-client CPU: RPC cost on every byte served from the stripes
+        or the pagepool, plus data-move cost on stripe misses (class doc)."""
+        client_seconds = (
+            served_bytes / self.cal.stripe_rpc_bw + stripe_bytes / self.cal.stripe_move_bw
+        )
+        if client_seconds > 0:
+            return self.clock.transfer([self.client], client_seconds)
+        return None
+
+    # ------------------------------------------------------------------- io
     def batch_io(self, item_ids, epoch, positions) -> Event:
-        man = self._manifest()
         self.cache.touch(self.dataset_id)
+        if self.fill_plane is not None:
+            return self._ondemand_io(item_ids, epoch, positions)
         hits = self.pagepool.access_epoch_batch(item_ids, epoch, positions)
         resident = self._resident[item_ids]
 
         fill_mask = (~resident) & (~hits)
-        stripe_mask = resident & (~hits)
         flows = []
 
         fill_bytes = float(fill_mask.sum()) * self.cal.item_bytes
@@ -224,34 +285,13 @@ class HoardBackend(_Backend):
                 self.metrics.count("remote_bytes", fill_bytes)
                 self.metrics.count("fill_bytes", fill_bytes)
 
-        stripe_total = float(stripe_mask.sum()) * self.cal.item_bytes
-        if stripe_mask.any():
-            src_nodes = self.cache.store.locate_batch(self.dataset_id, item_ids[stripe_mask], self.node)
-            # network + source-disk flows per stripe source; rarely binding
-            # at paper scale but mechanistically present (misplacement and
-            # many-jobs-per-cache-node scenarios make them bind)
-            for src_id in np.unique(src_nodes):
-                nbytes = float((src_nodes == src_id).sum()) * self.cal.item_bytes
-                src = self.topology.node(int(src_id))
-                path = [src.nvme, *self.topology.path(src, self.node)]
-                flows.append(self.clock.transfer(path, nbytes))
-                if self.metrics:
-                    if src.node_id == self.node.node_id:
-                        self.metrics.count("local_stripe_bytes", nbytes)
-                    else:
-                        self.metrics.count("peer_bytes", nbytes)
-                        self.metrics.count_link(src.node_id, self.node.node_id, nbytes)
-            if self.metrics:
-                self.metrics.count("stripe_bytes", stripe_total)
+        stripe_flows, stripe_total = self._stripe_flows(item_ids[resident & (~hits)])
+        flows.extend(stripe_flows)
 
-        # GPFS-client CPU: RPC cost on every byte served from the stripes or
-        # the pagepool, plus data-move cost on stripe misses (see class doc)
         served_bytes = stripe_total + float(hits.sum()) * self.cal.item_bytes
-        client_seconds = (
-            served_bytes / self.cal.stripe_rpc_bw + stripe_total / self.cal.stripe_move_bw
-        )
-        if client_seconds > 0:
-            flows.append(self.clock.transfer([self.client], client_seconds))
+        client = self._client_flow(served_bytes, stripe_total)
+        if client is not None:
+            flows.append(client)
         if self.metrics and hits.any():
             self.metrics.count("ram_bytes", float(hits.sum()) * self.cal.item_bytes)
 
@@ -261,9 +301,68 @@ class HoardBackend(_Backend):
                 self.cache.mark_filled(self.dataset_id)
         return self.clock.all_of(flows)
 
+    def _ondemand_io(self, item_ids, epoch, positions) -> Event:
+        """Tri-state step IO over the shared fill plane (see class doc)."""
+        hits = self.pagepool.access_epoch_batch(item_ids, epoch, positions)
+        filled = self.fill_plane.filled_mask_for_items(item_ids)
+        blocked_items = item_ids[(~filled) & (~hits)]
+
+        flows, stripe_now = self._stripe_flows(item_ids[filled & (~hits)])
+        # pagepool hits are served inside the client daemon: client RPC cost
+        # only, same as the AFM-mode model (no separate RAM flow)
+        hit_bytes = float(hits.sum()) * self.cal.item_bytes
+        if hit_bytes and self.metrics:
+            self.metrics.count("ram_bytes", hit_bytes)
+        client = self._client_flow(stripe_now + hit_bytes, stripe_now)
+        if client is not None:
+            flows.append(client)
+
+        fill_events = []
+        if len(blocked_items):
+            for c in np.unique(self.fill_plane.chunks_of(blocked_items)):
+                ev = self.fill_plane.demand(int(c))
+                if ev is not None:
+                    fill_events.append(ev)
+        self._heartbeat(item_ids)
+
+        if not len(blocked_items):
+            return self.clock.all_of(flows)
+
+        def two_phase():
+            # phase A: immediate stripe/pagepool service + in-flight fills
+            if flows or fill_events:
+                yield self.clock.all_of([*flows, *fill_events])
+            # phase B: the just-landed chunks are served from the stripes
+            b_flows, stripe_b = self._stripe_flows(blocked_items)
+            b_client = self._client_flow(stripe_b, stripe_b)
+            if b_client is not None:
+                b_flows.append(b_client)
+            if b_flows:
+                yield self.clock.all_of(b_flows)
+
+        return self.clock.process(two_phase())
+
+    def _heartbeat(self, item_ids: np.ndarray) -> None:
+        """Pace the clairvoyant prefetcher with distinct-chunks-consumed."""
+        if self.prefetcher is None:
+            return
+        if self._chunks_seen is None:
+            self._chunks_seen = np.zeros(self._manifest().n_chunks, dtype=bool)
+        self._chunks_seen[self.fill_plane.chunks_of(item_ids)] = True
+        self.prefetcher.note_progress(int(self._chunks_seen.sum()))
+
 
 class HoardLoader:
-    """The transparent iterator: ``for batch_meta in loader`` per epoch."""
+    """The transparent iterator: ``for batch_meta in loader`` per epoch.
+
+    Requirement 4's POSIX transparency becomes iterator transparency: the
+    training loop sees ``(item_ids, positions)`` batches drawn from a
+    deterministic per-epoch permutation (:class:`EpochPlan`) and cannot tell
+    which tier serves them.  Because the permutation is seeded and known
+    before the epoch runs, the same plan object also drives the clairvoyant
+    :class:`~repro.core.prefetch.PrefetchScheduler` — loader and prefetcher
+    agree on the exact first-touch order by construction.
+    """
 
     def __init__(
         self,

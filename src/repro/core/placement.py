@@ -74,8 +74,12 @@ class PlacementEngine:
     ) -> list[Node]:
         """Pick a cache-node subset with enough aggregate free capacity.
 
-        Prefers nodes near ``near`` (a job's compute nodes), then emptiest
-        nodes first so stripes spread across the cluster's free capacity.
+        Prefers nodes near ``near`` (a job's compute nodes), then nodes with
+        the least *pending fill ingest* (reserved-but-unfilled stripe bytes:
+        an on-demand fill in progress will stream those bytes across the
+        node's NIC and NVMe write queue, so stacking a second filling
+        dataset there serialises both fills), then emptiest nodes first so
+        stripes spread across the cluster's free capacity.
         """
         need = float(total_bytes)
         anchor_racks = {n.rack_id for n in near} if near else set()
@@ -84,6 +88,7 @@ class PlacementEngine:
         def key(n: Node):
             return (
                 0 if n.rack_id in anchor_racks else (1 if n.pod_id in anchor_pods else 2),
+                self.cache.store.pending_fill_bytes(n.node_id),
                 self.cache.store.bytes_on_node(n.node_id),
                 n.node_id,
             )
@@ -116,10 +121,13 @@ class PlacementEngine:
         )
 
         def score(n: Node):
+            # locality first (node > rack > pod, Section 4.5); among equals,
+            # avoid nodes still ingesting an on-demand fill — their NIC and
+            # NVMe write queue are already carrying remote->stripe traffic
             if not cached_nodes:
-                return (3, n.node_id)
+                return (3, 0, n.node_id)
             d = min(self.topology.distance(n, c) for c in cached_nodes)
-            return (d, n.node_id)
+            return (d, self.cache.store.pending_fill_bytes(n.node_id), n.node_id)
 
         candidates = sorted(
             (n for n in self.topology.nodes if self.inventory.free[n.node_id] >= job.gpus_per_node),

@@ -1,0 +1,211 @@
+"""On-demand fill data plane + clairvoyant prefetch scheduler.
+
+The paper's second usage model (Section 3): Hoard "can cache the data from a
+central storage system before the start of the job **or during the initial
+execution of the job**".  This module implements the *during* path:
+
+* :class:`FillTracker` — the shared, chunk-granular fill control plane for
+  one dataset.  Exactly one remote fetch per chunk is ever issued, no matter
+  how many jobs (or the prefetcher) want it: later demands join the
+  in-flight transfer's completion event.  Landed chunks are written into the
+  :class:`~repro.core.stripestore.StripeStore` (``put_chunk``) so every
+  subsequent reader takes the stripe path — the cold dataset transparently
+  converges to fully cached during epoch 1.
+
+* :class:`PrefetchScheduler` — a clairvoyant (NoPFS-style, arXiv 2101.08734)
+  scheduler.  Deep-learning input pipelines draw from a *known* per-epoch
+  permutation (:class:`~repro.core.loader.EpochPlan`), so the exact
+  first-touch order of chunks is computable before the epoch starts.  The
+  scheduler walks that order ahead of the consumer, keeping a bounded number
+  of remote->stripe transfers in flight, optionally pacing itself against
+  consumer progress so it never runs more than ``window_chunks`` ahead.
+
+Every byte is booked as flows on the simulated fabric (remote NIC, core,
+rack up-links, node NICs, NVMe write queues), so fill traffic contends with
+training ingest honestly — the epoch-1 cost of an on-demand fill is an
+*output* of the flow network, not a constant.
+
+Fill fan-out with replication r > 1 is modelled as it is implemented in AFM:
+one remote fetch to the chunk's primary replica, then peer copies from the
+primary to the remaining replicas.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import numpy as np
+
+from .cache import CacheManager
+from .metrics import JobMetrics
+from .simclock import Event, Resource, SimClock
+from .topology import Topology
+
+
+class FillTracker:
+    """Shared chunk-fill bookkeeping + remote read-through for one dataset.
+
+    ``demand(chunk)`` is the single entry point for both the prefetcher and
+    the miss path of :class:`~repro.core.loader.HoardBackend`:
+
+    * chunk already filled            -> ``None`` (read from the stripes),
+    * chunk fill in flight            -> the existing completion event,
+    * otherwise                       -> start the remote->stripe transfer
+                                         and return its completion event.
+
+    An optional ``ingest_bw`` resource models a per-dataset AFM-gateway
+    service ceiling; by default only the physical fabric (remote NIC, links,
+    NVMe) limits fill throughput, which matches the paper's asynchronous
+    pre-population mode.
+    """
+
+    def __init__(
+        self,
+        clock: SimClock,
+        topology: Topology,
+        cache: CacheManager,
+        dataset_id: str,
+        *,
+        ingest_bw: Optional[float] = None,
+        metrics: Optional[JobMetrics] = None,
+    ):
+        self.clock = clock
+        self.topology = topology
+        self.cache = cache
+        self.store = cache.store
+        self.dataset_id = dataset_id
+        self.inflight: dict[int, Event] = {}
+        self.ingest = (
+            Resource(f"fill_ingest.{dataset_id}", float(ingest_bw)) if ingest_bw else None
+        )
+        self.metrics = metrics
+        self.filled_events = 0          # chunks this tracker landed (for tests)
+
+    # ------------------------------------------------------------- queries
+    def _manifest(self):
+        return self.store.manifests[self.dataset_id]
+
+    def filled_mask_for_items(self, item_ids: np.ndarray) -> np.ndarray:
+        """Per-item bool mask: is the item's chunk resident in the stripes?"""
+        man = self._manifest()
+        return self.store.chunk_filled_mask(self.dataset_id, item_ids // man.items_per_chunk)
+
+    def chunks_of(self, item_ids: np.ndarray) -> np.ndarray:
+        return item_ids // self._manifest().items_per_chunk
+
+    @property
+    def complete(self) -> bool:
+        return self.store.filled_fraction(self.dataset_id) >= 1.0
+
+    # -------------------------------------------------------------- demand
+    def demand(self, chunk: int) -> Optional[Event]:
+        """Need ``chunk`` resident: join or start its fill; None if filled."""
+        man = self._manifest()
+        if man.is_filled(chunk):
+            return None
+        if chunk in self.inflight:
+            return self.inflight[chunk]
+        return self._start_fill(chunk)
+
+    def _start_fill(self, chunk: int) -> Event:
+        man = self._manifest()
+        replicas = man.chunk_nodes[chunk]
+        primary = self.topology.node(replicas[0])
+        head = [self.ingest] if self.ingest else []
+        flows = [
+            self.clock.transfer(
+                [*head, *self.topology.path_from_remote(primary), primary.nvme],
+                man.chunk_bytes,
+            )
+        ]
+        # replica fan-out: peer copies from the primary (never re-fetched)
+        for node_id in replicas[1:]:
+            peer = self.topology.node(node_id)
+            flows.append(
+                self.clock.transfer(
+                    [primary.nvme, *self.topology.path(primary, peer), peer.nvme],
+                    man.chunk_bytes,
+                )
+            )
+        done = self.clock.event()
+        self.inflight[chunk] = done
+        if self.metrics:
+            self.metrics.count("remote_bytes", man.chunk_bytes)
+            self.metrics.count("fill_bytes", man.chunk_bytes * len(replicas))
+
+        def _landed(_v):
+            self.store.put_chunk(self.dataset_id, chunk)
+            self.inflight.pop(chunk, None)
+            self.filled_events += 1
+            self.cache.note_chunk_filled(self.dataset_id)
+            done.set()
+
+        self.clock.all_of(flows).on_fire(_landed)
+        return done
+
+
+class PrefetchScheduler:
+    """Clairvoyant remote->stripe prefetcher over a known epoch permutation.
+
+    ``start(order)`` launches a simulated process that fills chunks in the
+    permutation's *first-touch* order, keeping at most ``max_inflight``
+    transfers outstanding.  With ``window_chunks`` set, the scheduler also
+    paces itself against consumer progress (``note_progress``), never
+    running more than that many chunks ahead — the NoPFS buffer-bound.  A
+    restarted scheduler (interrupted fill) skips already-filled chunks, so
+    fills resume instead of repeating.
+    """
+
+    def __init__(
+        self,
+        tracker: FillTracker,
+        *,
+        max_inflight: int = 8,
+        window_chunks: Optional[int] = None,
+    ):
+        self.tracker = tracker
+        self.clock = tracker.clock
+        self.max_inflight = max(1, int(max_inflight))
+        self.window_chunks = window_chunks
+        self.cursor = 0                      # consumer progress, in chunks consumed
+        self._progress_evt: Optional[Event] = None
+        self.issued = 0                      # fills this scheduler initiated
+
+    # ------------------------------------------------------------- schedule
+    @staticmethod
+    def first_touch_sequence(order: np.ndarray, items_per_chunk: int) -> np.ndarray:
+        """Chunk indices in the order the permutation first touches them."""
+        chunks = order // items_per_chunk
+        _, first_idx = np.unique(chunks, return_index=True)
+        return chunks[np.sort(first_idx)]
+
+    def start(self, order: np.ndarray) -> Event:
+        """Run the fill schedule for one epoch permutation; Event on done."""
+        man = self.tracker._manifest()
+        seq = self.first_touch_sequence(np.asarray(order), man.items_per_chunk)
+        return self.clock.process(self._run(seq))
+
+    def note_progress(self, chunks_consumed: int) -> None:
+        """Consumer heartbeat: monotonic count of distinct chunks consumed."""
+        self.cursor = max(self.cursor, int(chunks_consumed))
+        if self._progress_evt is not None:
+            evt, self._progress_evt = self._progress_evt, None
+            evt.set()
+
+    def _run(self, seq: np.ndarray):
+        pending: list[Event] = []
+        for k, chunk in enumerate(seq):
+            while self.window_chunks is not None and k - self.cursor >= self.window_chunks:
+                self._progress_evt = self.clock.event()
+                yield self._progress_evt
+            ev = self.tracker.demand(int(chunk))
+            if ev is None:
+                continue
+            self.issued += 1
+            pending.append(ev)
+            pending = [e for e in pending if not e.fired]
+            while len(pending) >= self.max_inflight:
+                yield pending[0]
+                pending = [e for e in pending if not e.fired]
+        for ev in pending:
+            yield ev

@@ -50,6 +50,16 @@ class StripeManifest:
     chunk_nodes: list[list[int]] = field(default_factory=list)  # chunk -> replicas
     chunk_crc: list[int] = field(default_factory=list)
     materialized: bool = False
+    # per-chunk fill state for the on-demand (first-epoch) fill path; empty
+    # list (old manifests) means fully filled at create time
+    chunk_filled: list[bool] = field(default_factory=list)
+
+    def is_filled(self, chunk: int) -> bool:
+        return not self.chunk_filled or self.chunk_filled[chunk]
+
+    @property
+    def n_filled(self) -> int:
+        return self.n_chunks if not self.chunk_filled else int(sum(self.chunk_filled))
 
     @property
     def n_chunks(self) -> int:
@@ -83,6 +93,10 @@ class StripeStore:
         self.manifests: dict[str, StripeManifest] = {}
         # bytes of cache data resident per node (for capacity accounting)
         self.node_usage: dict[int, int] = {n.node_id: 0 for n in topology.nodes}
+        # reserved-but-unfilled bytes per node (incremental mirror of the
+        # manifests' chunk_filled state; placement reads this per candidate
+        # node, so it must stay O(1))
+        self._pending_fill: dict[int, int] = {n.node_id: 0 for n in topology.nodes}
 
     # ----------------------------------------------------------------- create
     def create(
@@ -96,11 +110,19 @@ class StripeStore:
         replication: int = 1,
         materialize: bool = False,
         payload: Optional[Callable[[int], bytes]] = None,
+        prefill: bool = True,
     ) -> StripeManifest:
         """Lay out (and optionally write) a dataset across ``nodes``.
 
         ``payload(chunk_idx) -> bytes`` supplies real chunk contents when
         materializing; defaults to a deterministic pseudo-random fill.
+
+        ``prefill=False`` reserves the stripe layout (placement + capacity)
+        but marks every chunk *unfilled*: the on-demand fill path
+        (:mod:`repro.core.prefetch`) later lands chunks one at a time via
+        :meth:`put_chunk` while epoch 1 of the training job is running.
+        Capacity is charged up front either way — admission stays
+        all-or-nothing (paper Requirement 2).
         """
         if dataset_id in self.manifests:
             raise StripeError(f"dataset {dataset_id!r} already striped")
@@ -119,7 +141,8 @@ class StripeStore:
         for c in range(man.n_chunks):
             replicas = [man.node_ids[(c + r) % nn] for r in range(replication)]
             man.chunk_nodes.append(replicas)
-            if materialize:
+            man.chunk_filled.append(bool(prefill))
+            if materialize and prefill:
                 blob = payload(c) if payload else self._default_payload(man, c)
                 crc = zlib.crc32(blob)
                 man.chunk_crc.append(crc)
@@ -132,6 +155,8 @@ class StripeStore:
                 man.chunk_crc.append(0)
             for node_id in replicas:
                 self.node_usage[node_id] += man.chunk_bytes
+                if not prefill:
+                    self._pending_fill[node_id] += man.chunk_bytes
         self.manifests[dataset_id] = man
         if materialize and self.root:
             with open(os.path.join(self.root, f"{dataset_id}.manifest.json"), "w") as fh:
@@ -146,6 +171,62 @@ class StripeStore:
         if not self.root:
             raise StripeError("materialized store needs a root directory")
         return os.path.join(self.root, f"node{node_id}", dataset_id, f"chunk_{chunk:06d}")
+
+    # ------------------------------------------------------------- fill plane
+    def put_chunk(
+        self, dataset_id: str, chunk: int, payload: Optional[Callable[[int], bytes]] = None
+    ) -> bool:
+        """Land one remote chunk into its stripe replicas (on-demand fill).
+
+        Marks the chunk filled (idempotent; returns ``True`` only on the
+        filling transition) and, in materialized mode, writes the real bytes
+        + CRC to every replica.  Called by the fill data plane
+        (:class:`repro.core.prefetch.FillTracker`) when a remote->stripe
+        transfer completes, never directly by readers.
+        """
+        man = self.manifests[dataset_id]
+        if man.is_filled(chunk):
+            return False
+        if man.materialized:
+            blob = payload(chunk) if payload else self._default_payload(man, chunk)
+            man.chunk_crc[chunk] = zlib.crc32(blob)
+            for node_id in man.chunk_nodes[chunk]:
+                path = self._chunk_path(dataset_id, node_id, chunk)
+                os.makedirs(os.path.dirname(path), exist_ok=True)
+                with open(path, "wb") as fh:
+                    fh.write(blob)
+        man.chunk_filled[chunk] = True
+        for node_id in man.chunk_nodes[chunk]:
+            self._pending_fill[node_id] -= man.chunk_bytes
+        return True
+
+    def filled_fraction(self, dataset_id: str) -> float:
+        man = self.manifests[dataset_id]
+        return man.n_filled / max(1, man.n_chunks)
+
+    def unfilled_chunks(self, dataset_id: str) -> np.ndarray:
+        man = self.manifests[dataset_id]
+        if not man.chunk_filled:
+            return np.empty(0, dtype=np.int64)
+        return np.flatnonzero(~np.asarray(man.chunk_filled, dtype=bool))
+
+    def chunk_filled_mask(self, dataset_id: str, chunks: np.ndarray) -> np.ndarray:
+        """Vectorised fill state for an array of chunk indices."""
+        man = self.manifests[dataset_id]
+        if not man.chunk_filled:
+            return np.ones(len(chunks), dtype=bool)
+        return np.asarray(man.chunk_filled, dtype=bool)[chunks]
+
+    def pending_fill_bytes(self, node_id: int) -> int:
+        """Bytes a node still expects from remote (reserved, unfilled chunks).
+
+        The placement engine uses this as ingest-pressure scoring: during an
+        on-demand fill these bytes will cross the node's NIC and NVMe write
+        queue, so compute placed there competes with the fill.  O(1): an
+        incremental counter maintained by create/put_chunk/repair/drain/
+        fail_node/delete, never a manifest scan.
+        """
+        return self._pending_fill[node_id]
 
     # ------------------------------------------------------------------ reads
     def locate(self, dataset_id: str, item: int, reader: Node) -> Node:
@@ -189,6 +270,10 @@ class StripeStore:
         if not man.materialized:
             raise StripeError("read_item on a non-materialized dataset")
         chunk = man.chunk_of_item(item)
+        if not man.is_filled(chunk):
+            raise StripeError(
+                f"{dataset_id} chunk {chunk} not filled yet (on-demand fill in progress)"
+            )
         src = self.locate(dataset_id, item, reader)
         blob = self._read_chunk(man, src.node_id, chunk)
         off = (item - chunk * man.items_per_chunk) * man.item_bytes
@@ -205,6 +290,10 @@ class StripeStore:
     def read_chunk_verified(self, dataset_id: str, chunk: int, reader: Node) -> bytes:
         """Read a chunk, repairing from a healthy replica on corruption."""
         man = self.manifests[dataset_id]
+        if not man.is_filled(chunk):
+            raise StripeError(
+                f"{dataset_id} chunk {chunk} not filled yet (on-demand fill in progress)"
+            )
         last_err: Optional[Exception] = None
         replicas = sorted(
             man.chunk_nodes[chunk],
@@ -227,6 +316,8 @@ class StripeStore:
                 if node_id in replicas:
                     replicas.remove(node_id)
                     self.node_usage[node_id] -= man.chunk_bytes
+                    if not man.is_filled(c):
+                        self._pending_fill[node_id] -= man.chunk_bytes
                     if man.materialized:
                         path = self._chunk_path(man.dataset_id, node_id, c)
                         if os.path.exists(path):
@@ -247,7 +338,9 @@ class StripeStore:
                 if not candidates:
                     break
                 dst = min(candidates, key=lambda nid: self.node_usage[nid])
-                if man.materialized:
+                # an unfilled chunk has no bytes yet: re-replicate metadata
+                # only; the eventual put_chunk writes every replica
+                if man.materialized and man.is_filled(c):
                     blob = self.read_chunk_verified(dataset_id, c, self.topology.node(dst))
                     path = self._chunk_path(dataset_id, dst, c)
                     os.makedirs(os.path.dirname(path), exist_ok=True)
@@ -255,6 +348,8 @@ class StripeStore:
                         fh.write(blob)
                 replicas.append(dst)
                 self.node_usage[dst] += man.chunk_bytes
+                if not man.is_filled(c):
+                    self._pending_fill[dst] += man.chunk_bytes
                 created += 1
         return created
 
@@ -275,7 +370,8 @@ class StripeStore:
             if not candidates:
                 continue
             dst = min(candidates, key=lambda nid: self.node_usage[nid])
-            if man.materialized:
+            # unfilled chunks are a pure metadata retarget (no bytes on disk)
+            if man.materialized and man.is_filled(c):
                 blob = self._read_chunk(man, node_id, c)
                 path = self._chunk_path(dataset_id, dst, c)
                 os.makedirs(os.path.dirname(path), exist_ok=True)
@@ -287,6 +383,9 @@ class StripeStore:
             replicas[replicas.index(node_id)] = dst
             self.node_usage[node_id] -= man.chunk_bytes
             self.node_usage[dst] += man.chunk_bytes
+            if not man.is_filled(c):
+                self._pending_fill[node_id] -= man.chunk_bytes
+                self._pending_fill[dst] += man.chunk_bytes
             moved += 1
         return moved
 
@@ -299,6 +398,8 @@ class StripeStore:
         for c, replicas in enumerate(man.chunk_nodes):
             for node_id in replicas:
                 self.node_usage[node_id] -= man.chunk_bytes
+                if not man.is_filled(c):
+                    self._pending_fill[node_id] -= man.chunk_bytes
                 touched_nodes.add(node_id)
                 if man.materialized:
                     path = self._chunk_path(man.dataset_id, node_id, c)

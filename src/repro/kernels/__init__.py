@@ -5,6 +5,7 @@ wrapper in ``ops.py`` (interpret mode off-TPU).  Validated by shape/dtype
 sweeps in ``tests/test_kernels.py``.
 """
 
+from . import pallas_compat  # noqa: F401  (must precede kernel imports)
 from . import ops, ref
 from .decode_attention import decode_attention
 from .flash_attention import flash_attention

@@ -1,0 +1,13 @@
+"""Pallas-TPU API compatibility across jax versions.
+
+The kernels target the current pallas surface where the TPU compiler-params
+class is ``pltpu.CompilerParams``; older jaxlibs (<= 0.4.x) only ship the
+pre-rename ``TPUCompilerParams``.  Alias the new name onto the module so the
+kernel sources stay written against the modern API.  Imported for its side
+effect before any kernel module (see ``kernels/__init__.py``).
+"""
+
+from jax.experimental.pallas import tpu as pltpu
+
+if not hasattr(pltpu, "CompilerParams"):  # pragma: no cover - version-dependent
+    pltpu.CompilerParams = pltpu.TPUCompilerParams

@@ -7,3 +7,9 @@ os.environ.pop("XLA_FLAGS", None)
 import jax
 
 jax.config.update("jax_enable_x64", False)
+
+# Property tests import hypothesis; containers without it fall back to the
+# bundled deterministic engine (the real package always wins when present).
+from repro._compat.hypothesis_fallback import install as _install_hypothesis
+
+_install_hypothesis()

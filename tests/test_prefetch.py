@@ -1,0 +1,261 @@
+"""On-demand fill data plane + clairvoyant prefetch scheduler.
+
+Covers the paper's second usage model (cache fill *during* the initial
+execution of the job): read-through population, convergence to CACHED,
+fill resumption, peer-replica preference, dedup across concurrent jobs,
+and fill-aware placement scoring.
+"""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    CacheManager,
+    CacheState,
+    DatasetSpec,
+    FillTracker,
+    HoardBackend,
+    HoardLoader,
+    JobMetrics,
+    PAPER,
+    PlacementEngine,
+    PrefetchScheduler,
+    SimClock,
+    StripeStore,
+    Topology,
+    TopologyConfig,
+    TrainingJob,
+)
+
+# small workload: 1024 items x 1 KB, 64-item chunks -> 16 chunks
+CAL = dataclasses.replace(
+    PAPER,
+    dataset_bytes=1024 * 1024.0,
+    dataset_items=1024,
+    batch_items=128,
+)
+
+
+def _cluster(items_per_chunk=64, n_nodes=4):
+    clock = SimClock()
+    topo = Topology(TopologyConfig(nodes_per_rack=n_nodes), clock)
+    store = StripeStore(topo)
+    cache = CacheManager(
+        topo, store, clock, items_per_chunk=items_per_chunk, fill_bw=CAL.fill_bw
+    )
+    spec = DatasetSpec("ds", "nfs://store/ds", CAL.dataset_items, int(CAL.item_bytes))
+    cache.register(spec)
+    return clock, topo, store, cache
+
+
+def _ondemand_job(clock, topo, cache, node, tracker, *, epochs, scheduler=None, seed=0):
+    jm = JobMetrics(f"job@{node.name}")
+    be = HoardBackend(
+        clock, topo, node, CAL, cache=cache, dataset_id="ds",
+        metrics=jm, fill_plane=tracker, prefetcher=scheduler,
+    )
+    loader = HoardLoader(be, CAL, epochs=epochs, seed=seed)
+    return TrainingJob(f"job@{node.name}", clock, loader, CAL, metrics=jm), jm
+
+
+def test_coldstart_epoch1_readthrough_populates_stripes():
+    """Epoch-1 read-through converges a cold dataset to fully cached, with
+    the remote store touched exactly once per chunk."""
+    clock, topo, store, cache = _cluster()
+    cache.admit("ds", topo.nodes[:4], on_demand=True)
+    assert store.filled_fraction("ds") == 0.0
+    fm = JobMetrics("fill")
+    tracker = FillTracker(clock, topo, cache, "ds", metrics=fm)
+    job, jm = _ondemand_job(clock, topo, cache, topo.nodes[0], tracker, epochs=1)
+    done = job.start()
+    clock.run()
+    assert done.fired
+    assert store.filled_fraction("ds") == 1.0
+    assert cache.is_cached("ds")
+    # one remote stream for the whole dataset, not one per miss
+    assert fm.counters["remote_bytes"] == pytest.approx(CAL.dataset_bytes)
+    assert jm.counters["remote_bytes"] == 0.0            # job never goes remote itself
+    assert jm.counters["stripe_bytes"] > 0
+
+
+def test_epoch2_hit_rate_converged():
+    """After the epoch-1 fill, epoch 2 is served entirely from the cache:
+    zero additional remote bytes, every item from stripes or pagepool."""
+    clock, topo, store, cache = _cluster()
+    cache.admit("ds", topo.nodes[:4], on_demand=True)
+    fm = JobMetrics("fill")
+    tracker = FillTracker(clock, topo, cache, "ds", metrics=fm)
+    job, jm = _ondemand_job(clock, topo, cache, topo.nodes[0], tracker, epochs=2)
+    job.start()
+    clock.run()
+    assert fm.counters["remote_bytes"] == pytest.approx(CAL.dataset_bytes)  # epoch 1 only
+    served = jm.counters["stripe_bytes"] + jm.counters["ram_bytes"]
+    assert served == pytest.approx(2 * CAL.dataset_bytes)
+    # epoch 2 alone accounts for a full dataset of cache-local service
+    assert jm.counters["stripe_bytes"] >= CAL.dataset_bytes
+
+
+def test_concurrent_jobs_share_one_fill():
+    """N cold jobs trigger one dataset stream total (fills are deduped via
+    the shared tracker), unlike the per-job AFM path."""
+    clock, topo, store, cache = _cluster()
+    cache.admit("ds", topo.nodes[:4], on_demand=True)
+    fm = JobMetrics("fill")
+    tracker = FillTracker(clock, topo, cache, "ds", metrics=fm)
+    jobs = [
+        _ondemand_job(clock, topo, cache, topo.nodes[i], tracker, epochs=1, seed=i)[0]
+        for i in range(4)
+    ]
+    events = [j.start() for j in jobs]
+    clock.run()
+    assert all(e.fired for e in events)
+    assert fm.counters["remote_bytes"] == pytest.approx(CAL.dataset_bytes)
+    assert store.filled_fraction("ds") == 1.0
+
+
+def test_interrupted_fill_resumes_without_refetch():
+    """A paced scheduler stalls mid-fill (no consumer progress); a fresh
+    scheduler resumes from the manifest's fill state and never re-fetches
+    landed chunks."""
+    clock, topo, store, cache = _cluster()
+    cache.admit("ds", topo.nodes[:4], on_demand=True)
+    fm = JobMetrics("fill")
+    tracker = FillTracker(clock, topo, cache, "ds", metrics=fm)
+    order = np.random.default_rng(0).permutation(CAL.dataset_items)
+
+    paced = PrefetchScheduler(tracker, max_inflight=2, window_chunks=4)
+    paced.start(order)
+    clock.run()                      # stalls: window exhausted, no heartbeats
+    partial = store.filled_fraction("ds")
+    assert 0.0 < partial < 1.0
+    assert cache.entries["ds"].state is CacheState.FILLING
+
+    resumed = PrefetchScheduler(tracker, max_inflight=2)     # unbounded window
+    resumed.start(order)
+    clock.run()
+    assert store.filled_fraction("ds") == 1.0
+    assert cache.is_cached("ds")
+    # resumed run skipped every chunk the paced run landed
+    assert resumed.issued == 16 - paced.issued
+    assert fm.counters["remote_bytes"] == pytest.approx(CAL.dataset_bytes)
+
+
+def test_peer_replica_read_preferred_over_remote():
+    """Once a chunk is resident on *any* cache node, other nodes read the
+    peer's stripe across the fabric instead of going back to remote."""
+    clock, topo, store, cache = _cluster()
+    cache.admit("ds", topo.nodes[:1], on_demand=True)        # stripes on node0 only
+    fm = JobMetrics("fill")
+    tracker = FillTracker(clock, topo, cache, "ds", metrics=fm)
+    # warm the whole dataset from a scheduler (lands on node0)
+    PrefetchScheduler(tracker).start(np.arange(CAL.dataset_items))
+    clock.run()
+    assert store.filled_fraction("ds") == 1.0
+    filled_remote = fm.counters["remote_bytes"]
+
+    # a job on node1 now reads everything from node0's stripes
+    job, jm = _ondemand_job(clock, topo, cache, topo.nodes[1], tracker, epochs=1)
+    job.start()
+    clock.run()
+    assert jm.counters["peer_bytes"] > 0
+    assert jm.counters["remote_bytes"] == 0.0
+    assert fm.counters["remote_bytes"] == filled_remote      # no new remote traffic
+
+
+def test_first_touch_sequence_is_clairvoyant():
+    """The schedule is exactly the chunks in permutation first-touch order."""
+    order = np.array([9, 1, 14, 2, 8, 0])
+    seq = PrefetchScheduler.first_touch_sequence(order, items_per_chunk=4)
+    assert seq.tolist() == [2, 0, 3]
+    # a full permutation covers every chunk exactly once
+    full = PrefetchScheduler.first_touch_sequence(
+        np.random.default_rng(1).permutation(1024), items_per_chunk=64
+    )
+    assert sorted(full.tolist()) == list(range(16))
+
+
+def test_demand_joins_inflight_fill():
+    """Two demands for one chunk share a single transfer (join, not dup)."""
+    clock, topo, store, cache = _cluster()
+    cache.admit("ds", topo.nodes[:4], on_demand=True)
+    fm = JobMetrics("fill")
+    tracker = FillTracker(clock, topo, cache, "ds", metrics=fm)
+    ev1 = tracker.demand(3)
+    ev2 = tracker.demand(3)
+    assert ev1 is ev2
+    clock.run()
+    assert ev1.fired
+    assert store.manifests["ds"].is_filled(3)
+    assert fm.counters["remote_bytes"] == pytest.approx(store.manifests["ds"].chunk_bytes)
+    assert tracker.demand(3) is None                         # filled -> stripe path
+
+
+def test_placement_avoids_fill_ingesting_nodes():
+    """Fill-aware scoring: a node still ingesting an on-demand fill loses
+    ties to quieter nodes even when it holds fewer bytes."""
+    clock, topo, store, cache = _cluster(n_nodes=8)
+    engine = PlacementEngine(topo, cache)
+    # heavier, fully-filled dataset on nodes 0-3
+    cache.register(DatasetSpec("warm", "nfs://warm", 2048, int(CAL.item_bytes)))
+    cache.admit("warm", topo.nodes[:4])
+    cache.mark_filled("warm")
+    # lighter dataset actively filling on nodes 4-7
+    cache.admit("ds", topo.nodes[4:8], on_demand=True)
+    assert store.pending_fill_bytes(4) > 0
+    picked = engine.choose_cache_nodes(1.0, count=2)
+    # pure emptiest-first would pick the filling nodes (less resident bytes);
+    # fill-aware scoring prefers the quiet, warmer nodes
+    assert all(n.node_id < 4 for n in picked)
+
+
+def test_pending_fill_counter_tracks_fill_and_maintenance():
+    """The O(1) ingest-pressure counter stays consistent through fill,
+    drain of an unfilled node (metadata retarget) and completion."""
+    clock, topo, store, cache = _cluster()
+    cache.admit("ds", topo.nodes[:4], on_demand=True)
+    total_pending = sum(store.pending_fill_bytes(n.node_id) for n in topo.nodes[:4])
+    assert total_pending == 16 * store.manifests["ds"].chunk_bytes
+    # draining an unfilled node's replicas must not open chunk files
+    moved = store.drain("ds", node_id=1)
+    assert moved > 0
+    assert store.pending_fill_bytes(1) == 0
+    assert sum(store.pending_fill_bytes(n.node_id) for n in topo.nodes[:4]) == total_pending
+    fm = JobMetrics("fill")
+    tracker = FillTracker(clock, topo, cache, "ds", metrics=fm)
+    PrefetchScheduler(tracker).start(np.arange(CAL.dataset_items))
+    clock.run()
+    assert store.filled_fraction("ds") == 1.0
+    assert all(store.pending_fill_bytes(n.node_id) == 0 for n in topo.nodes)
+    store.delete("ds")
+    assert all(store.pending_fill_bytes(n.node_id) == 0 for n in topo.nodes)
+
+
+def test_prefetch_conflicts_with_non_afm_fill():
+    """prefetch=True would double-stream the dataset under the other fill
+    models; run_scenario refuses the combination."""
+    from repro.core import run_scenario
+
+    with pytest.raises(ValueError, match="prefetch"):
+        run_scenario("hoard", epochs=1, n_jobs=1, fill="ondemand", prefetch=True)
+
+
+def test_materialized_ondemand_put_chunk_round_trip(tmp_path):
+    """Materialized mode: read-through writes real bytes + CRC; unfilled
+    chunks refuse reads with a clear error."""
+    clock = SimClock()
+    topo = Topology(TopologyConfig(), clock)
+    store = StripeStore(topo, root=str(tmp_path))
+    payloads = {c: bytes([c]) * 4 * 64 for c in range(4)}
+    store.create("ds", n_items=16, item_bytes=64, nodes=topo.nodes[:2],
+                 items_per_chunk=4, materialize=True, prefill=False,
+                 payload=lambda c: payloads[c])
+    from repro.core import StripeError
+    with pytest.raises(StripeError, match="not filled"):
+        store.read_item("ds", 0, topo.nodes[0])
+    assert store.put_chunk("ds", 0, payload=lambda c: payloads[c])
+    assert not store.put_chunk("ds", 0)                      # idempotent
+    raw = store.read_item("ds", 2, topo.nodes[0])
+    assert raw == payloads[0][2 * 64 : 3 * 64]
+    assert store.filled_fraction("ds") == 0.25

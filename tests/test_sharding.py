@@ -47,6 +47,8 @@ _SCRIPT = textwrap.dedent(
         c = jax.jit(step_fn(cfg, shape, model=model),
                     in_shardings=(param_sh, batch_sh)).lower(params_abs, batch_abs).compile()
     cost = c.cost_analysis() or {}
+    if isinstance(cost, (list, tuple)):   # jax<=0.4 returns [dict], newer a dict
+        cost = cost[0] if cost else {}
     print(json.dumps({"ok": True, "flops": cost.get("flops", 0.0)}))
     """
 )
