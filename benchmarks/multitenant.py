@@ -1,0 +1,156 @@
+"""Multi-tenant workload benchmarks: hyper-parameter sweep + cache churn.
+
+The paper's usage model (Sections 1-3): many jobs share cached datasets —
+"subsequent epochs of the same job and different invocations of jobs that
+share the same data requirements, e.g. hyper-parameter tuning".  These
+scenarios drive the workload engine (``core/workload.py``) through exactly
+that regime on the Table-2 cluster:
+
+* ``hp-sweep``  — six trials over one dataset; four arrive cold at t=0 and
+  share a single on-demand fill, two arrive later, queue for GPUs and ride
+  the warm cache.  Warm trials' first epochs run at steady-state speed.
+* ``churn``     — three datasets of different sizes (0.5x / 1x / 1.5x
+  ImageNet) over a cache that fits only two.  Jobs arrive over time; LRU
+  evicts idle datasets mid-simulation, later jobs re-admit them (cold again)
+  and re-stream exactly one dataset's worth of remote bytes.  At least two
+  datasets are evicted AND later re-admitted, and the warm re-run of a
+  resident dataset beats the cold re-admission of the same dataset.
+
+Run: ``PYTHONPATH=src python -m benchmarks.run --only multitenant``
+"""
+
+from __future__ import annotations
+
+from repro.core import (
+    ClusterScheduler,
+    DatasetSpec,
+    PAPER,
+    WorkloadJob,
+    build_cluster,
+)
+
+from .common import Row, timed
+
+GB = 1e9
+ITEM_B = int(PAPER.item_bytes)
+
+
+def _engine(capacity_per_node: float) -> ClusterScheduler:
+    clock, topo, store, cache, placement = build_cluster(capacity_per_node=capacity_per_node)
+    return ClusterScheduler(clock, topo, store, cache, placement, cal=PAPER)
+
+
+def _job_line(res, job_id: str) -> str:
+    rec = res.record(job_id)
+    e = rec.result.epoch_times
+    if rec.admitted_cold:
+        tag = "cold"                           # this job admitted the dataset
+    elif rec.dataset_state_at_start == "filling":
+        tag = "join"                           # joined another job's fill
+    else:
+        tag = "warm"                           # dataset fully resident
+    return (
+        f"  {job_id:8s} {rec.spec.dataset_id:12s} t={rec.spec.arrival:7.0f}"
+        f"  queued={rec.queued_s:6.1f}s  {tag:4s}  e1={e[0]:7.1f}s  e2={e[-1]:7.1f}s"
+    )
+
+
+# ------------------------------------------------------------------ hp sweep
+def hp_sweep():
+    eng = _engine(1e12)
+    eng.cache.register(
+        DatasetSpec("imagenet", "nfs://store/imagenet", PAPER.dataset_items, ITEM_B)
+    )
+    jobs = [
+        WorkloadJob(
+            f"trial{i}", "imagenet",
+            arrival=0.0 if i < 4 else 800.0,       # 2 late trials queue for GPUs
+            epochs=3, fill="ondemand", cache_node_ids=[0, 1, 2, 3],
+        )
+        for i in range(6)
+    ]
+    res = eng.run(jobs)
+    lines = ["Hyper-parameter sweep — 6 trials, one dataset, shared on-demand fill"]
+    lines += [_job_line(res, f"trial{i}") for i in range(6)]
+    cold_e1 = res.record("trial0").result.epoch_times[0]
+    warm_e1 = min(res.record(f"trial{i}").result.epoch_times[0] for i in (4, 5))
+    remote = res.metrics.total("remote_bytes") / GB
+    lines.append(
+        f"  cold e1 {cold_e1:.0f}s vs warm e1 {warm_e1:.0f}s "
+        f"({cold_e1 / warm_e1:.2f}x); remote traffic {remote:.0f} GB "
+        f"(one dataset stream, shared by 4 cold trials)"
+    )
+    if not warm_e1 < 0.8 * cold_e1:
+        raise AssertionError(f"warm trials not faster: {warm_e1:.1f} vs {cold_e1:.1f}")
+    if not remote < 1.02 * PAPER.dataset_bytes / GB:
+        raise AssertionError(f"fill not shared: {remote:.1f} GB remote")
+    return res, cold_e1, warm_e1, lines
+
+
+# --------------------------------------------------------------------- churn
+CHURN_JOBS = [
+    # (job_id, dataset, arrival)
+    ("a1", "imagenet", 0.0),
+    ("b1", "half", 2600.0),
+    ("c1", "big", 5200.0),        # cache full: admits by evicting idle imagenet
+    ("a2", "imagenet", 7800.0),   # re-admission (cold again): evicts half+big
+    ("b2", "half", 10400.0),      # re-admission of half (fits alongside imagenet)
+    ("a3", "imagenet", 11000.0),  # imagenet still resident: warm
+]
+
+
+def churn():
+    # three datasets (72 / 144 / 216 GB) over 4 x 80 GB of cache: any two of
+    # {imagenet, half} + one fits, all three never do
+    eng = _engine(80 * GB)
+    for name, items in (
+        ("imagenet", PAPER.dataset_items),
+        ("half", PAPER.dataset_items // 2),
+        ("big", PAPER.dataset_items * 3 // 2),
+    ):
+        eng.cache.register(DatasetSpec(name, f"nfs://store/{name}", items, ITEM_B))
+    jobs = [
+        WorkloadJob(job_id, ds, arrival=t, epochs=2, fill="ondemand",
+                    cache_node_ids=[0, 1, 2, 3])
+        for job_id, ds, t in CHURN_JOBS
+    ]
+    res = eng.run(jobs)
+    lines = ["Mixed-size churn — 3 datasets (0.5x/1x/1.5x) over a 2-dataset cache"]
+    lines += [_job_line(res, job_id) for job_id, _ds, _t in CHURN_JOBS]
+    ev = ", ".join(f"{ds}@{t:.0f}s" for t, ds in res.evictions())
+    re_ad = ", ".join(f"{ds}@{t:.0f}s" for t, ds in res.readmissions())
+    lines.append(f"  evictions:     {ev}")
+    lines.append(f"  re-admissions: {re_ad}")
+    churned = res.churned_datasets()
+    cold_e1 = res.record("a2").result.epoch_times[0]    # re-admitted, cold
+    warm_e1 = res.record("a3").result.epoch_times[0]    # resident, warm
+    remote = res.metrics.total("remote_bytes") / GB
+    lines.append(
+        f"  {len(churned)} datasets evicted AND re-admitted mid-simulation "
+        f"({', '.join(sorted(churned))}); imagenet cold re-admission e1 "
+        f"{cold_e1:.0f}s vs warm re-run e1 {warm_e1:.0f}s; "
+        f"remote traffic {remote:.0f} GB (2x imagenet + 2x half + 1x big)"
+    )
+    if len(churned) < 2:
+        raise AssertionError(f"expected >=2 churned datasets, got {churned}")
+    if not warm_e1 < 0.9 * cold_e1:
+        raise AssertionError(f"warm not faster than cold: {warm_e1:.1f} vs {cold_e1:.1f}")
+    return res, cold_e1, warm_e1, lines
+
+
+# ------------------------------------------------------------------- harness
+def multitenant_rows():
+    rows, all_lines = [], []
+    (res_s, cold_s, warm_s, lines_s), us_s = timed(hp_sweep)
+    rows.append(Row("multitenant/hp_sweep", us_s, f"cold_e1={cold_s:.0f}s,warm_e1={warm_s:.0f}s"))
+    all_lines += lines_s + [""]
+    (res_c, cold_c, warm_c, lines_c), us_c = timed(churn)
+    churned = ",".join(sorted(res_c.churned_datasets()))
+    rows.append(Row("multitenant/churn", us_c, f"churned={churned},warm_e1={warm_c:.0f}s"))
+    all_lines += lines_c
+    return rows, all_lines
+
+
+if __name__ == "__main__":
+    for line in multitenant_rows()[1]:
+        print(line)

@@ -19,6 +19,7 @@ def main() -> None:
     from . import paper_tables
     from .coldstart import coldstart_rows
     from .ingest_demand import ingest_rows
+    from .multitenant import multitenant_rows
     from .roofline_table import roofline_rows
 
     benches = [
@@ -31,6 +32,7 @@ def main() -> None:
         ("table5", paper_tables.table5_uplink),
         ("coplacement", paper_tables.misplaced_job_scenario),
         ("coldstart", coldstart_rows),
+        ("multitenant", multitenant_rows),
         ("roofline", roofline_rows),
         ("ingest", ingest_rows),
     ]

@@ -11,7 +11,15 @@ Public API surface (see DESIGN.md for the paper mapping):
 * ``run_scenario`` / ``build_cluster``     — one-call experiment harness
 """
 
-from .cache import CacheEntry, CacheFullError, CacheManager, CacheState, DatasetSpec, EvictionPolicy
+from .cache import (
+    CacheEntry,
+    CacheEvent,
+    CacheFullError,
+    CacheManager,
+    CacheState,
+    DatasetSpec,
+    EvictionPolicy,
+)
 from .calibration import PAPER, WorkloadCalibration
 from .cluster import ScenarioResult, build_cluster, run_scenario
 from .loader import (
@@ -29,14 +37,23 @@ from .simclock import AllOf, Event, Resource, SimClock
 from .stripestore import ChunkCorruption, StripeError, StripeManifest, StripeStore
 from .tiers import LRUCache, LRUStackModel, PagePool, buffer_cache_items
 from .topology import Node, Topology, TopologyConfig
+from .workload import (
+    ClusterScheduler,
+    JobRecord,
+    WorkloadJob,
+    WorkloadResult,
+    stable_seed,
+)
 
 __all__ = [
-    "AllOf", "CacheEntry", "CacheFullError", "CacheManager", "CacheState",
-    "ChunkCorruption", "ClusterMetrics", "DatasetSpec", "Event", "EvictionPolicy",
-    "FillTracker", "HoardBackend", "HoardLoader", "JobMetrics", "JobResult",
-    "JobSpec", "LRUCache", "LRUStackModel", "LocalCopyBackend", "Node", "PAPER",
-    "PagePool", "Placement", "PlacementEngine", "PrefetchScheduler",
-    "RemoteBackend", "Resource", "ScenarioResult", "SimClock", "StripeError",
-    "StripeManifest", "StripeStore", "Topology", "TopologyConfig", "TrainingJob",
-    "WorkloadCalibration", "buffer_cache_items", "build_cluster", "run_scenario",
+    "AllOf", "CacheEntry", "CacheEvent", "CacheFullError", "CacheManager",
+    "CacheState", "ChunkCorruption", "ClusterMetrics", "ClusterScheduler",
+    "DatasetSpec", "Event", "EvictionPolicy", "FillTracker", "HoardBackend",
+    "HoardLoader", "JobMetrics", "JobRecord", "JobResult", "JobSpec", "LRUCache",
+    "LRUStackModel", "LocalCopyBackend", "Node", "PAPER", "PagePool", "Placement",
+    "PlacementEngine", "PrefetchScheduler", "RemoteBackend", "Resource",
+    "ScenarioResult", "SimClock", "StripeError", "StripeManifest", "StripeStore",
+    "Topology", "TopologyConfig", "TrainingJob", "WorkloadCalibration",
+    "WorkloadJob", "WorkloadResult", "buffer_cache_items", "build_cluster",
+    "run_scenario", "stable_seed",
 ]

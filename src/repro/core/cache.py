@@ -68,6 +68,21 @@ class CacheEntry:
     created_at: float = 0.0
     fill_done: Optional[Event] = None
     access_seq: int = 0          # tie-break for LRU at equal times
+    # multi-tenant safety (workload engine): datasets with live readers are
+    # never eviction victims; FILLING datasets carry their fill data plane so
+    # eviction can cancel outstanding remote transfers
+    active_readers: int = 0
+    fill_plane: Optional[object] = None   # prefetch.FillTracker (untyped: no cycle)
+    admissions: int = 0                   # how many times admit() ran (re-admission telemetry)
+
+
+@dataclass
+class CacheEvent:
+    """One cache-lifecycle transition, for churn accounting and tests."""
+
+    t: float
+    op: str              # "admit" | "readmit" | "filled" | "evict"
+    dataset_id: str
 
 
 class CacheFullError(RuntimeError):
@@ -99,6 +114,13 @@ class CacheManager:
         self.replication = int(replication)
         self.entries: dict[str, CacheEntry] = {}
         self._seq = itertools.count()
+        # lifecycle event log: every admit/readmit/filled/evict with sim time,
+        # in order.  The workload engine and the churn benchmarks read this to
+        # count evictions and re-admissions mid-simulation.
+        self.events: list[CacheEvent] = []
+
+    def _log(self, op: str, dataset_id: str) -> None:
+        self.events.append(CacheEvent(self.clock.now, op, dataset_id))
 
     # ------------------------------------------------------------- lifecycle
     def register(self, spec: DatasetSpec) -> CacheEntry:
@@ -112,6 +134,21 @@ class CacheManager:
         return sum(
             self.capacity_per_node - self.store.bytes_on_node(n.node_id) for n in nodes
         )
+
+    def bytes_needed(self, dataset_id: str, *, items_per_chunk: Optional[int] = None) -> float:
+        """Capacity :meth:`admit` will charge for the dataset.
+
+        Chunk-granular: the stripe store allocates whole chunks, so a partial
+        last chunk still occupies ``items_per_chunk * item_bytes`` (a
+        hypothesis-found invariant, tests/test_cache.py).  Callers sizing a
+        cache-node subset (the workload engine) must use this, not
+        ``spec.total_bytes``, or the subset can be short by up to one chunk
+        per replica.
+        """
+        entry = self._require(dataset_id)
+        ipc = items_per_chunk or self.items_per_chunk
+        n_chunks = -(-entry.spec.n_items // ipc)
+        return n_chunks * ipc * entry.spec.item_bytes * self.replication
 
     def _require(self, dataset_id: str) -> CacheEntry:
         if dataset_id not in self.entries:
@@ -144,23 +181,37 @@ class CacheManager:
         entry = self._require(dataset_id)
         if entry.state in (CacheState.CACHED, CacheState.FILLING):
             return entry
-        # chunk-granular accounting: the stripe store allocates whole chunks,
-        # so a partial last chunk still occupies items_per_chunk * item_bytes
-        # (hypothesis-found invariant: tests/test_cache.py)
-        ipc = items_per_chunk or self.items_per_chunk
-        n_chunks = -(-entry.spec.n_items // ipc)
-        need = n_chunks * ipc * entry.spec.item_bytes * self.replication
+        need = self.bytes_needed(dataset_id, items_per_chunk=items_per_chunk)
+        if self.free_bytes(nodes) < need and self.policy is EvictionPolicy.LRU:
+            # dry-run first: evicting is destructive (victims must re-stream
+            # from remote), so refuse up front when even evicting EVERY idle
+            # dataset on the target nodes cannot free enough — a doomed
+            # admission must not leave warm datasets destroyed behind it
+            node_ids = {n.node_id for n in nodes}
+            reclaimable = sum(
+                self.store.bytes_on_nodes(e.spec.dataset_id, node_ids)
+                for e in self._evictable(exclude=dataset_id, node_ids=node_ids)
+            )
+            if self.free_bytes(nodes) + reclaimable < need:
+                raise CacheFullError(
+                    f"{dataset_id}: need {need:.2e} B on {len(nodes)} nodes; "
+                    f"evicting every idle dataset on the target nodes frees only "
+                    f"{reclaimable:.2e} B on top of {self.free_bytes(nodes):.2e} free"
+                )
         while self.free_bytes(nodes) < need:
             if self.policy is EvictionPolicy.MANUAL:
                 raise CacheFullError(
                     f"{dataset_id}: need {need:.2e} B on {len(nodes)} nodes, "
                     f"have {self.free_bytes(nodes):.2e}; evict something first"
                 )
-            victim = self._lru_victim(exclude=dataset_id)
+            # only victims holding stripes on the TARGET nodes free capacity
+            # toward this admission — evicting the global LRU could destroy a
+            # dataset on disjoint nodes for zero gain
+            victim = self._lru_victim(exclude=dataset_id, nodes=nodes)
             if victim is None:
                 raise CacheFullError(
                     f"{dataset_id}: cache exhausted and nothing evictable "
-                    f"(all pinned or in use)"
+                    f"on the target nodes (all pinned or in use)"
                 )
             self.evict(victim)
         self.store.create(
@@ -177,12 +228,24 @@ class CacheManager:
         entry.nodes = [n.node_id for n in nodes]
         entry.state = CacheState.FILLING
         entry.fill_done = self.clock.event()
+        entry.admissions += 1
+        # a freshly-admitted dataset counts as just-used: a concurrent admit's
+        # LRU scan must not pick the dataset another job is about to read
+        entry.last_access = self.clock.now
+        entry.access_seq = next(self._seq)
+        self._log("readmit" if entry.admissions > 1 else "admit", dataset_id)
         return entry
 
     def mark_filled(self, dataset_id: str) -> None:
         """Transition FILLING -> CACHED and wake waiters on ``fill_done``."""
         entry = self._require(dataset_id)
         entry.state = CacheState.CACHED
+        # the fill is over: detach the fill plane so later jobs take the
+        # plain cached read path instead of threading every batch through
+        # nothing-to-do fill-mask bookkeeping (jobs already holding the
+        # tracker keep their reference and see every chunk filled)
+        entry.fill_plane = None
+        self._log("filled", dataset_id)
         if entry.fill_done is not None:
             entry.fill_done.set()
 
@@ -226,8 +289,23 @@ class CacheManager:
             path = [self.topology.remote_nic, *self.topology.path_from_remote(node)[1:], node.nvme]
             flows.append(self.clock.transfer(path, per_node))
         done = self.clock.all_of(flows)
-        done.on_fire(lambda _v: self.mark_filled(dataset_id))
+        # generation guard: a FILLING dataset is evictable (workload engine
+        # LRU churn), so by the time this transfer lands the dataset may have
+        # been evicted — or evicted AND re-admitted with a fresh, unfilled
+        # layout.  A stale completion must not flip either to CACHED.
+        admission_gen = entry.admissions
+        done.on_fire(lambda _v: self._finish_prefetch(dataset_id, admission_gen))
         return done
+
+    def _finish_prefetch(self, dataset_id: str, admission_gen: int) -> None:
+        entry = self.entries.get(dataset_id)
+        if (
+            entry is not None
+            and entry.state is CacheState.FILLING
+            and entry.admissions == admission_gen
+            and dataset_id in self.store.manifests
+        ):
+            self.mark_filled(dataset_id)
 
     # ---------------------------------------------------------------- access
     def touch(self, dataset_id: str) -> None:
@@ -240,6 +318,29 @@ class CacheManager:
 
     def unpin(self, dataset_id: str) -> None:
         self._require(dataset_id).pinned = False
+
+    def acquire(self, dataset_id: str) -> CacheEntry:
+        """Register a live reader (a running job): blocks eviction.
+
+        Reader pins are how eviction stays safe while other jobs are live —
+        a dataset some job is actively iterating can never be the LRU victim,
+        without the user having to ``pin`` it manually.
+        """
+        entry = self._require(dataset_id)
+        entry.active_readers += 1
+        self.touch(dataset_id)
+        return entry
+
+    def release(self, dataset_id: str) -> None:
+        """Drop a reader pin (job exit).  Dataset stays cached (Req 2)."""
+        entry = self._require(dataset_id)
+        if entry.active_readers <= 0:
+            raise ValueError(f"dataset {dataset_id!r} has no active readers")
+        entry.active_readers -= 1
+
+    def attach_fill_plane(self, dataset_id: str, plane) -> None:
+        """Remember the dataset's fill data plane so evict() can cancel it."""
+        self._require(dataset_id).fill_plane = plane
 
     def is_cached(self, dataset_id: str) -> bool:
         e = self.entries.get(dataset_id)
@@ -254,37 +355,76 @@ class CacheManager:
                 "bytes": e.spec.total_bytes,
                 "nodes": list(e.nodes),
                 "pinned": e.pinned,
+                "active_readers": e.active_readers,
                 "last_access": e.last_access,
             }
             for e in self.entries.values()
         ]
 
     # --------------------------------------------------------------- eviction
-    def _lru_victim(self, exclude: Optional[str] = None) -> Optional[str]:
-        candidates = [
+    def _evictable(
+        self, exclude: Optional[str] = None, node_ids: Optional[set] = None
+    ) -> list[CacheEntry]:
+        """Entries eviction may target (shared by victim pick and dry-run)."""
+        return [
             e
             for e in self.entries.values()
-            if e.state is CacheState.CACHED
+            if e.state in (CacheState.CACHED, CacheState.FILLING)
             and not e.pinned
+            and e.active_readers == 0
             and e.spec.dataset_id != exclude
+            and (node_ids is None or node_ids.intersection(e.nodes))
         ]
+
+    def _lru_victim(
+        self, exclude: Optional[str] = None, nodes: Optional[Sequence[Node]] = None
+    ) -> Optional[str]:
+        """Least-recently-used evictable dataset, or None.
+
+        Pinned datasets and datasets with live readers are never victims
+        (eviction must be safe while other jobs run).  An idle FILLING
+        dataset *is* evictable — its fill is cancelled — but only after
+        every evictable CACHED dataset, since an in-progress fill is work
+        already paid for.  With ``nodes`` given, only datasets holding
+        stripes on at least one of those nodes qualify (evicting anything
+        else frees no capacity there).
+        """
+        node_ids = {n.node_id for n in nodes} if nodes is not None else None
+        candidates = self._evictable(exclude=exclude, node_ids=node_ids)
         if not candidates:
             return None
-        victim = min(candidates, key=lambda e: (e.last_access, e.access_seq))
+        victim = min(
+            candidates,
+            key=lambda e: (e.state is CacheState.FILLING, e.last_access, e.access_seq),
+        )
         return victim.spec.dataset_id
 
     def evict(self, dataset_id: str) -> None:
-        """Whole-dataset eviction (never partial; see module docstring)."""
+        """Whole-dataset eviction (never partial; see module docstring).
+
+        Evicting a FILLING dataset cancels its fill data plane first, so
+        in-flight remote transfers land as no-ops instead of writing into a
+        freed (or re-admitted) stripe layout.
+        """
         entry = self._require(dataset_id)
         if entry.pinned:
             raise ValueError(f"dataset {dataset_id!r} is pinned")
+        if entry.active_readers > 0:
+            raise ValueError(
+                f"dataset {dataset_id!r} has {entry.active_readers} active readers"
+            )
         entry.state = CacheState.EVICTING
+        if entry.fill_plane is not None:
+            entry.fill_plane.cancel()
+            entry.fill_plane = None
         self.store.delete(dataset_id)
         entry.nodes = []
         entry.state = CacheState.REGISTERED
+        self._log("evict", dataset_id)
 
     def delete(self, dataset_id: str) -> None:
         """Remove the dataset from the cache *and* the registry."""
-        if self.entries.get(dataset_id) and self.entries[dataset_id].state is CacheState.CACHED:
+        entry = self.entries.get(dataset_id)
+        if entry and entry.state in (CacheState.CACHED, CacheState.FILLING):
             self.evict(dataset_id)
         self.entries.pop(dataset_id, None)

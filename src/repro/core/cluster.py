@@ -2,9 +2,11 @@
 
 One call — ``run_scenario(backend="hoard", epochs=2, ...)`` — constructs the
 4-node/4-GPU-per-node cluster of Table 2 (or any other topology), registers
-the ImageNet-like dataset, places jobs with the placement engine, runs the
+the ImageNet-like dataset and hands N identical jobs to the multi-tenant
+workload engine (:mod:`repro.core.workload`), which places them, runs the
 discrete-event simulation and returns per-job results + metrics.  Every
-benchmark module is a thin wrapper over this.
+benchmark module is a thin wrapper over this; this, in turn, is a thin
+single-dataset wrapper over :class:`~repro.core.workload.ClusterScheduler`.
 """
 
 from __future__ import annotations
@@ -14,20 +16,13 @@ from typing import Optional
 
 from .cache import CacheManager, DatasetSpec, EvictionPolicy
 from .calibration import PAPER, WorkloadCalibration
-from .loader import (
-    HoardBackend,
-    HoardLoader,
-    JobResult,
-    LocalCopyBackend,
-    RemoteBackend,
-    TrainingJob,
-)
+from .loader import JobResult
 from .metrics import ClusterMetrics
-from .placement import JobSpec, PlacementEngine
-from .prefetch import FillTracker, PrefetchScheduler
+from .placement import PlacementEngine
 from .simclock import SimClock
 from .stripestore import StripeStore
 from .topology import Topology, TopologyConfig
+from .workload import ClusterScheduler, WorkloadJob, WorkloadResult, stable_seed
 
 
 @dataclass
@@ -37,6 +32,7 @@ class ScenarioResult:
     metrics: ClusterMetrics
     sim_seconds: float
     cal: WorkloadCalibration = field(default_factory=lambda: PAPER)
+    workload: Optional[WorkloadResult] = None   # full engine records/events
 
     @property
     def mean_epoch_times(self) -> list[float]:
@@ -139,53 +135,41 @@ def run_scenario(
         # prefetch books a whole-dataset transfer + mark_filled of its own;
         # combining it with another fill model double-streams the dataset
         raise ValueError(f"prefetch=True conflicts with fill={fill!r}")
-    tracker = scheduler = None
     if backend == "hoard":
+        # the scenario contract: the dataset is admitted at t=0, before any
+        # job runs.  For fill="ondemand" the engine wires the fill plane:
+        # job0 (fill_driver) creates the FillTracker + clairvoyant schedule
+        # when it finds the dataset FILLING with no plane attached.
         cache.admit("imagenet", cnodes, on_demand=(fill == "ondemand"))
         if fill == "prepopulated":
             cache.mark_filled("imagenet")
-        elif fill == "ondemand":
-            tracker = FillTracker(clock, topo, cache, "imagenet", metrics=metrics.job("fill:imagenet"))
-            scheduler = PrefetchScheduler(tracker, max_inflight=prefetch_inflight)
         if prefetch:
-            done = cache.prefetch("imagenet", cnodes)
+            cache.prefetch("imagenet", cnodes)
 
-    placements = []
-    for j in range(n_jobs):
-        jspec = JobSpec(f"job{j}", "imagenet", n_nodes=1, gpus_per_node=4)
-        if job_nodes is not None:
-            node = topo.node(job_nodes[j % len(job_nodes)])
-            engine.inventory.take(node, 4)
-            placements.append((jspec, node))
-        else:
-            pl = engine.place(jspec)
-            placements.append((jspec, pl.compute_nodes[0]))
-
+    scheduler = ClusterScheduler(clock, topo, store, cache, engine, cal=cal, metrics=metrics)
     jobs = []
-    for jspec, node in placements:
-        jm = metrics.job(jspec.job_id)
-        if backend == "rem":
-            be = RemoteBackend(clock, topo, node, cal, mdr=mdr, metrics=jm)
-        elif backend == "nvme":
-            be = LocalCopyBackend(clock, topo, node, cal, mdr=mdr, physical_copy=physical_copy, metrics=jm)
-        elif backend == "hoard":
-            be = HoardBackend(
-                clock, topo, node, cal, cache=cache, dataset_id="imagenet", mdr=mdr,
-                metrics=jm, fill_plane=tracker, prefetcher=scheduler,
+    for j in range(n_jobs):
+        job_id = f"job{j}"
+        jobs.append(
+            WorkloadJob(
+                job_id=job_id,
+                dataset_id="imagenet",
+                arrival=0.0,
+                epochs=epochs,
+                n_nodes=1,
+                gpus_per_node=4,
+                backend=backend,
+                fill=fill,
+                seed=seed + stable_seed(job_id),
+                mdr=mdr,
+                physical_copy=physical_copy,
+                compute_node_ids=(
+                    [job_nodes[j % len(job_nodes)]] if job_nodes is not None else None
+                ),
+                prefetch_inflight=prefetch_inflight,
+                fill_driver=(j == 0 and fill == "ondemand"),
+                cal=cal,
             )
-        else:
-            raise ValueError(f"unknown backend {backend!r}")
-        loader = HoardLoader(be, cal, epochs=epochs, seed=seed + hash(jspec.job_id) % 1000)
-        jobs.append(TrainingJob(jspec.job_id, clock, loader, cal, metrics=jm))
-
-    if scheduler is not None:
-        # clairvoyant: the epoch-1 permutation is known before the job runs
-        # (NoPFS); schedule fills in job0's first-touch order from t=0
-        scheduler.start(jobs[0].loader.plan.order(0))
-
-    done_events = [job.start() for job in jobs]
-    clock.run()
-    results = [ev.value for ev in done_events]
-    if any(r is None for r in results):
-        raise RuntimeError("simulation ended before all jobs finished")
-    return ScenarioResult(backend, results, metrics, clock.now, cal)
+        )
+    wl = scheduler.run(jobs)
+    return ScenarioResult(backend, wl.jobs, metrics, clock.now, cal, workload=wl)

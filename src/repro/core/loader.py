@@ -297,7 +297,15 @@ class HoardBackend(_Backend):
 
         if self._resident.all():
             entry = self.cache.entries[self.dataset_id]
-            if entry.state is CacheState.FILLING:
+            # per-job residency implies dataset-wide residency only when the
+            # stripe manifest agrees: an AFM job sharing an on-demand-admitted
+            # dataset must not flip it CACHED while the shared fill plane is
+            # still streaming chunks (CACHED => every chunk filled, and
+            # mark_filled detaches the fill plane, disarming cancellation)
+            if (
+                entry.state is CacheState.FILLING
+                and self.cache.store.filled_fraction(self.dataset_id) >= 1.0
+            ):
                 self.cache.mark_filled(self.dataset_id)
         return self.clock.all_of(flows)
 

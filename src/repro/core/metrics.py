@@ -89,6 +89,19 @@ class ClusterMetrics:
     def total(self, key: str) -> float:
         return sum(j.counters.get(key, 0.0) for j in self.jobs.values())
 
+    def total_matching(self, key: str, prefix: str) -> float:
+        """Sum a counter over jobs whose id starts with ``prefix``.
+
+        The workload engine names fill-plane metrics ``fill:<dataset>``, so
+        ``total_matching("remote_bytes", "fill:")`` is the cluster-wide
+        remote traffic attributable to cache fills (vs job miss paths).
+        """
+        return sum(
+            j.counters.get(key, 0.0)
+            for name, j in self.jobs.items()
+            if name.startswith(prefix)
+        )
+
     def traffic_matrix(self) -> dict[tuple[int, int], float]:
         out: dict[tuple[int, int], float] = defaultdict(float)
         for j in self.jobs.values():

@@ -112,7 +112,25 @@ class PlacementEngine:
 
     # ------------------------------------------------------------------ jobs
     def place(self, job: JobSpec, *, allow_misplaced: bool = True) -> Placement:
-        """Co-schedule a job with its dataset (node > rack > pod order)."""
+        """Co-schedule a job with its dataset (node > rack > pod order).
+
+        Raises when the cluster lacks free GPUs; callers that queue instead
+        (the workload engine) use :meth:`try_place`.
+        """
+        placement = self.try_place(job, allow_misplaced=allow_misplaced)
+        if placement is None:
+            raise RuntimeError(
+                f"job {job.job_id}: need {job.n_nodes} nodes with "
+                f"{job.gpus_per_node} free GPUs"
+            )
+        return placement
+
+    def try_place(self, job: JobSpec, *, allow_misplaced: bool = True) -> Optional[Placement]:
+        """Like :meth:`place`, but returns None when free GPUs are short.
+
+        GPU inventory is only taken on success, so a queued job (multi-tenant
+        engine) can retry when a running job releases its nodes.
+        """
         entry = self.cache.entries.get(job.dataset_id)
         cached_nodes = (
             [self.topology.node(nid) for nid in entry.nodes]
@@ -135,10 +153,7 @@ class PlacementEngine:
         )
         chosen = candidates[: job.n_nodes]
         if len(chosen) < job.n_nodes:
-            raise RuntimeError(
-                f"job {job.job_id}: need {job.n_nodes} nodes with "
-                f"{job.gpus_per_node} free GPUs, found {len(chosen)}"
-            )
+            return None
         if not allow_misplaced and cached_nodes:
             racks = {c.rack_id for c in cached_nodes}
             if all(n.rack_id not in racks for n in chosen):

@@ -80,6 +80,10 @@ class FillTracker:
         )
         self.metrics = metrics
         self.filled_events = 0          # chunks this tracker landed (for tests)
+        self.cancelled = False          # set by CacheManager.evict via cancel()
+        # register with the cache entry so evicting a FILLING dataset can
+        # cancel this tracker's outstanding transfers
+        cache.attach_fill_plane(dataset_id, self)
 
     # ------------------------------------------------------------- queries
     def _manifest(self):
@@ -97,9 +101,28 @@ class FillTracker:
     def complete(self) -> bool:
         return self.store.filled_fraction(self.dataset_id) >= 1.0
 
+    # -------------------------------------------------------------- cancel
+    def cancel(self) -> None:
+        """Abort the fill: outstanding transfers land as no-ops.
+
+        Called by :meth:`CacheManager.evict` when a FILLING dataset is the
+        eviction victim.  The simulated bytes already in flight still cross
+        the fabric (they were sent), but nothing is written into the stripe
+        store — the manifest is about to be deleted, and a later re-admission
+        lays out a *new* manifest that must start fully unfilled.  A
+        cancelled tracker refuses further demands; re-admission creates a
+        fresh tracker.
+        """
+        self.cancelled = True
+        self.inflight.clear()
+
     # -------------------------------------------------------------- demand
     def demand(self, chunk: int) -> Optional[Event]:
         """Need ``chunk`` resident: join or start its fill; None if filled."""
+        if self.cancelled:
+            raise RuntimeError(
+                f"fill plane for {self.dataset_id!r} was cancelled by eviction"
+            )
         man = self._manifest()
         if man.is_filled(chunk):
             return None
@@ -134,6 +157,12 @@ class FillTracker:
             self.metrics.count("fill_bytes", man.chunk_bytes * len(replicas))
 
         def _landed(_v):
+            if self.cancelled:
+                # eviction raced the transfer: the dataset's manifest is gone
+                # (or belongs to a re-admission); drop the chunk on the floor
+                # and leave `done` unfired — nobody may read through a
+                # cancelled plane, and a hung waiter is a loud bug signal
+                return
             self.store.put_chunk(self.dataset_id, chunk)
             self.inflight.pop(chunk, None)
             self.filled_events += 1
@@ -195,9 +224,13 @@ class PrefetchScheduler:
     def _run(self, seq: np.ndarray):
         pending: list[Event] = []
         for k, chunk in enumerate(seq):
+            if self.tracker.cancelled:
+                return                   # dataset evicted mid-fill; stop cleanly
             while self.window_chunks is not None and k - self.cursor >= self.window_chunks:
                 self._progress_evt = self.clock.event()
                 yield self._progress_evt
+                if self.tracker.cancelled:
+                    return
             ev = self.tracker.demand(int(chunk))
             if ev is None:
                 continue

@@ -91,6 +91,10 @@ class StripeStore:
         self.topology = topology
         self.root = root
         self.manifests: dict[str, StripeManifest] = {}
+        # per-dataset first-replica array (chunk -> node, -1 = data lost),
+        # cached for locate_batch's per-batch hot path; invalidated whenever
+        # fail_node/repair/drain/delete rewrite chunk placements
+        self._replica0: dict[str, np.ndarray] = {}
         # bytes of cache data resident per node (for capacity accounting)
         self.node_usage: dict[int, int] = {n.node_id: 0 for n in topology.nodes}
         # reserved-but-unfilled bytes per node (incremental mirror of the
@@ -229,6 +233,17 @@ class StripeStore:
         return self._pending_fill[node_id]
 
     # ------------------------------------------------------------------ reads
+    def _first_replica(self, dataset_id: str) -> np.ndarray:
+        """Cached chunk -> first-replica-node array (-1 where data is lost)."""
+        arr = self._replica0.get(dataset_id)
+        if arr is None:
+            man = self.manifests[dataset_id]
+            arr = np.asarray(
+                [reps[0] if reps else -1 for reps in man.chunk_nodes], dtype=np.int64
+            )
+            self._replica0[dataset_id] = arr
+        return arr
+
     def locate(self, dataset_id: str, item: int, reader: Node) -> Node:
         """Best replica for ``item`` read from ``reader`` (closest wins)."""
         man = self.manifests[dataset_id]
@@ -243,18 +258,29 @@ class StripeStore:
         """Vectorised ``locate``: node id serving each item for ``reader``."""
         man = self.manifests[dataset_id]
         chunks = items // man.items_per_chunk
-        if man.replication == 1:
-            nn = len(man.node_ids)
-            node_arr = np.asarray(man.node_ids, dtype=np.int64)
-            return node_arr[chunks % nn]
-        first = np.asarray([reps[0] for reps in man.chunk_nodes], dtype=np.int64)
-        # pick closest replica per chunk (replication is small; loop replicas)
+        first = self._first_replica(dataset_id)
         best = first[chunks]
+        if np.any(best < 0):
+            # some requested chunk has zero replicas (unrepaired node loss);
+            # mirror scalar locate(), which also fails for those items —
+            # batches touching only healthy chunks are served normally
+            lost = np.unique(chunks[best < 0])
+            raise StripeError(f"{dataset_id}: chunk(s) {lost.tolist()} have no replicas")
+        if man.replication == 1:
+            # the node is whatever chunk_nodes says NOW — fail_node/repair/
+            # drain rewrite placements, so deriving it from the original
+            # round-robin layout (node_ids[chunk % nn]) returns stale nodes
+            # after any maintenance operation
+            return best
+        # pick closest replica per chunk (replication is small; loop replicas)
         best_d = np.asarray(
             [self.topology.distance(reader, self.topology.node(int(b))) for b in best]
         )
         for r in range(1, man.replication):
-            cand_all = np.asarray([reps[r % len(reps)] for reps in man.chunk_nodes], dtype=np.int64)
+            cand_all = np.asarray(
+                [reps[r % len(reps)] if reps else -1 for reps in man.chunk_nodes],
+                dtype=np.int64,
+            )
             cand = cand_all[chunks]
             cand_d = np.asarray(
                 [self.topology.distance(reader, self.topology.node(int(c))) for c in cand]
@@ -311,6 +337,7 @@ class StripeStore:
     # ---------------------------------------------------------- node failure
     def fail_node(self, node_id: int) -> None:
         """Drop a node's chunks (simulated node loss)."""
+        self._replica0.clear()                    # placements change below
         for man in self.manifests.values():
             for c, replicas in enumerate(man.chunk_nodes):
                 if node_id in replicas:
@@ -330,6 +357,7 @@ class StripeStore:
         nodes, cache-node loss must not force a remote re-fetch.
         """
         man = self.manifests[dataset_id]
+        self._replica0.pop(dataset_id, None)      # placements change below
         want = target_replication or man.replication
         created = 0
         for c, replicas in enumerate(man.chunk_nodes):
@@ -362,6 +390,7 @@ class StripeStore:
         reads stop waiting on it.  Returns chunks moved.
         """
         man = self.manifests[dataset_id]
+        self._replica0.pop(dataset_id, None)      # placements change below
         moved = 0
         for c, replicas in enumerate(man.chunk_nodes):
             if node_id not in replicas:
@@ -392,6 +421,7 @@ class StripeStore:
     # ----------------------------------------------------------------- delete
     def delete(self, dataset_id: str) -> None:
         man = self.manifests.pop(dataset_id, None)
+        self._replica0.pop(dataset_id, None)
         if man is None:
             return
         touched_nodes = set()
@@ -417,3 +447,15 @@ class StripeStore:
 
     def bytes_on_node(self, node_id: int) -> int:
         return self.node_usage[node_id]
+
+    def bytes_on_nodes(self, dataset_id: str, node_ids: set) -> int:
+        """Bytes this dataset holds on the given nodes (eviction dry-run)."""
+        man = self.manifests.get(dataset_id)
+        if man is None:
+            return 0
+        return sum(
+            man.chunk_bytes
+            for reps in man.chunk_nodes
+            for nid in reps
+            if nid in node_ids
+        )

@@ -13,3 +13,15 @@ jax.config.update("jax_enable_x64", False)
 from repro._compat.hypothesis_fallback import install as _install_hypothesis
 
 _install_hypothesis()
+
+# CI runs property tests with a fixed, derandomized profile so failures are
+# reproducible and the coverage gate is deterministic.  Only the real
+# Hypothesis has profiles; the bundled fallback is already deterministic.
+try:
+    from hypothesis import settings as _hyp_settings
+
+    _hyp_settings.register_profile("ci", derandomize=True, deadline=None)
+    if os.environ.get("HYPOTHESIS_PROFILE"):
+        _hyp_settings.load_profile(os.environ["HYPOTHESIS_PROFILE"])
+except (ImportError, AttributeError):
+    pass

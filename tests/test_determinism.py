@@ -1,0 +1,89 @@
+"""Determinism: benchmark numbers must reproduce bit-for-bit.
+
+Two properties, both required for the numbers recorded in CHANGES.md to mean
+anything:
+
+* two runs of the same scenario in one process produce bit-identical
+  ``sim_seconds`` and per-epoch times (the DES is deterministic end to end),
+* the result does not depend on ``PYTHONHASHSEED`` — per-job seeds derive
+  from :func:`repro.core.stable_seed` (CRC32), not ``hash()``, which Python
+  randomizes per process.  The pre-fix code seeded each job's epoch
+  permutation with ``hash(job_id)``, so every fresh interpreter produced
+  slightly different epoch times.
+"""
+
+import dataclasses
+import json
+import os
+import pathlib
+import subprocess
+import sys
+
+import pytest
+
+from repro.core import PAPER, run_scenario, stable_seed
+
+# small workload so the full backend x fill matrix stays fast
+CAL = dataclasses.replace(
+    PAPER,
+    dataset_bytes=1024 * 1024.0,
+    dataset_items=1024,
+    batch_items=128,
+)
+
+MATRIX = [
+    ("rem", "afm"),
+    ("nvme", "afm"),
+    ("hoard", "afm"),
+    ("hoard", "ondemand"),
+    ("hoard", "prepopulated"),
+]
+
+
+def _fingerprint(backend: str, fill: str):
+    res = run_scenario(backend, epochs=2, n_jobs=2, cal=CAL, fill=fill, seed=7)
+    return (
+        res.sim_seconds,
+        tuple(tuple(j.epoch_times) for j in res.jobs),
+        tuple(j.startup_s for j in res.jobs),
+        tuple(sorted((k, v) for jm in res.metrics.jobs.values() for k, v in jm.counters.items())),
+    )
+
+
+@pytest.mark.parametrize("backend,fill", MATRIX)
+def test_run_scenario_bit_identical_across_runs(backend, fill):
+    """Same seed -> exactly equal times and byte counters, twice."""
+    assert _fingerprint(backend, fill) == _fingerprint(backend, fill)
+
+
+def test_stable_seed_properties():
+    assert stable_seed("job0") == stable_seed("job0")
+    assert 0 <= stable_seed("job0") < 1000
+    assert len({stable_seed(f"job{i}") for i in range(16)}) > 8   # spreads
+
+
+_SNIPPET = """
+import dataclasses, json
+from repro.core import PAPER, run_scenario
+CAL = dataclasses.replace(PAPER, dataset_bytes=1024 * 1024.0, dataset_items=1024, batch_items=128)
+res = run_scenario("hoard", epochs=2, n_jobs=2, cal=CAL, fill="ondemand", seed=7)
+print(json.dumps({
+    "sim": res.sim_seconds.hex(),
+    "epochs": [[t.hex() for t in j.epoch_times] for j in res.jobs],
+}))
+"""
+
+
+def test_results_independent_of_pythonhashseed():
+    """Fresh interpreters with different hash seeds agree to the last bit."""
+    src = str(pathlib.Path(__file__).resolve().parents[1] / "src")
+    outs = []
+    for hash_seed in ("0", "12345"):
+        env = dict(os.environ, PYTHONHASHSEED=hash_seed, PYTHONPATH=src)
+        proc = subprocess.run(
+            [sys.executable, "-c", _SNIPPET],
+            env=env, capture_output=True, text=True, timeout=120,
+        )
+        assert proc.returncode == 0, proc.stderr
+        outs.append(json.loads(proc.stdout))
+    assert outs[0] == outs[1]

@@ -1,0 +1,195 @@
+"""Property-based invariants that lock the stripe-store data plane down.
+
+The store maintains two *incremental* per-node counters — ``node_usage``
+(resident + reserved bytes) and ``_pending_fill`` (reserved-but-unfilled
+bytes) — updated by create/put_chunk/fail_node/repair/drain/delete.  The
+placement engine reads them per candidate node, so they must be O(1) *and*
+exactly equal to what a from-scratch scan of every manifest would produce,
+no matter how lifecycle and maintenance operations interleave.  These tests
+drive random operation sequences and compare against that oracle after every
+single step, so any drift pinpoints the op that introduced it.
+
+Runs under real Hypothesis when installed, else the bundled deterministic
+fallback engine (see ``repro._compat.hypothesis_fallback``); op sequences
+are plain integer lists so both engines can generate them.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import (
+    CacheFullError,
+    CacheManager,
+    CacheState,
+    DatasetSpec,
+    SimClock,
+    StripeError,
+    StripeStore,
+    Topology,
+    TopologyConfig,
+)
+
+N_NODES = 6
+# four datasets of different sizes; aggregate > capacity so admissions force
+# real LRU evictions (including of FILLING datasets) mid-sequence
+SIZES = {"a": 8, "b": 12, "c": 20, "d": 28}          # items (x100 B, 4/chunk)
+
+
+def _cluster(capacity=1500):
+    clock = SimClock()
+    topo = Topology(TopologyConfig(nodes_per_rack=N_NODES), clock)
+    store = StripeStore(topo)
+    cache = CacheManager(
+        topo, store, clock, capacity_per_node=capacity, items_per_chunk=4
+    )
+    for name, items in SIZES.items():
+        cache.register(DatasetSpec(name, f"nfs://{name}", items, 100))
+    return clock, topo, store, cache
+
+
+def _oracle(store):
+    """Recompute both counters from scratch by scanning every manifest."""
+    usage = {nid: 0 for nid in store.node_usage}
+    pending = {nid: 0 for nid in store.node_usage}
+    for man in store.manifests.values():
+        for c, reps in enumerate(man.chunk_nodes):
+            for nid in reps:
+                usage[nid] += man.chunk_bytes
+                if not man.is_filled(c):
+                    pending[nid] += man.chunk_bytes
+    return usage, pending
+
+
+def _assert_counters_match(store, history):
+    usage, pending = _oracle(store)
+    for nid in store.node_usage:
+        assert store.node_usage[nid] == usage[nid], (
+            f"node_usage[{nid}] drifted: incremental={store.node_usage[nid]} "
+            f"oracle={usage[nid]} after {history}"
+        )
+        assert store.pending_fill_bytes(nid) == pending[nid], (
+            f"pending_fill[{nid}] drifted: "
+            f"incremental={store.pending_fill_bytes(nid)} "
+            f"oracle={pending[nid]} after {history}"
+        )
+        assert store.pending_fill_bytes(nid) >= 0
+
+
+def _apply_op(clock, topo, store, cache, v):
+    """Decode one integer into an operation; returns a readable trace entry."""
+    op = v % 8
+    ds = "abcd"[(v >> 3) % 4]
+    node = (v >> 5) % N_NODES
+    clock.now += 1.0                                 # distinct LRU timestamps
+    entry = cache.entries.get(ds)
+    if op in (0, 1):                                 # admit (prefilled | on-demand)
+        if entry is not None and entry.state is CacheState.REGISTERED:
+            n_sub = 2 + (v >> 7) % 3                 # stripe over 2-4 nodes
+            try:
+                cache.admit(ds, topo.nodes[:n_sub], on_demand=(op == 1))
+                return f"admit({ds},od={op == 1},nodes={n_sub})"
+            except CacheFullError:
+                return f"admit({ds})->full"
+        return None
+    if op == 2:                                      # put_chunk (fill plane)
+        if ds in store.manifests:
+            unfilled = store.unfilled_chunks(ds)
+            if len(unfilled):
+                chunk = int(unfilled[(v >> 7) % len(unfilled)])
+                store.put_chunk(ds, chunk)
+                cache.note_chunk_filled(ds)
+                return f"put_chunk({ds},{chunk})"
+        return None
+    if op == 3:                                      # node loss
+        store.fail_node(node)
+        return f"fail_node({node})"
+    if op == 4:                                      # re-replicate
+        if ds in store.manifests:
+            store.repair(ds)
+            return f"repair({ds})"
+        return None
+    if op == 5:                                      # straggler drain
+        if ds in store.manifests:
+            store.drain(ds, node)
+            return f"drain({ds},{node})"
+        return None
+    if op == 6:                                      # whole-dataset eviction
+        if entry is not None and entry.state in (CacheState.CACHED, CacheState.FILLING):
+            cache.evict(ds)
+            return f"evict({ds})"
+        return None
+    # op == 7: delete from cache AND registry, then re-register (keeps the
+    # dataset pool stable so later ops can re-admit it)
+    if entry is not None:
+        cache.delete(ds)
+        cache.register(DatasetSpec(ds, f"nfs://{ds}", SIZES[ds], 100))
+        return f"delete({ds})"
+    return None
+
+
+@settings(max_examples=60, deadline=None)
+@given(ops=st.lists(st.integers(0, 2**16), min_size=1, max_size=40))
+def test_incremental_counters_never_drift(ops):
+    """node_usage and pending_fill match the manifest-scan oracle after
+    EVERY operation in a random create/put_chunk/fail_node/repair/drain/
+    evict/delete sequence."""
+    clock, topo, store, cache = _cluster()
+    history = []
+    for v in ops:
+        trace = _apply_op(clock, topo, store, cache, v)
+        if trace is not None:
+            history.append(trace)
+        _assert_counters_match(store, history[-6:])
+
+
+@settings(max_examples=40, deadline=None)
+@given(ops=st.lists(st.integers(0, 2**16), min_size=1, max_size=30))
+def test_locate_batch_always_agrees_with_locate(ops):
+    """The vectorised read path returns the same serving node as the scalar
+    path for every item, throughout arbitrary maintenance interleavings."""
+    clock, topo, store, cache = _cluster()
+    for v in ops:
+        _apply_op(clock, topo, store, cache, v)
+        reader = topo.nodes[v % N_NODES]
+        for ds, man in store.manifests.items():
+            healthy = [c for c, reps in enumerate(man.chunk_nodes) if reps]
+            if healthy:
+                # batches over healthy chunks are served even when other
+                # chunks lost all replicas
+                items = np.asarray(
+                    [c * man.items_per_chunk for c in healthy], dtype=np.int64
+                )
+                batch = store.locate_batch(ds, items, reader)
+                for k in (0, len(items) // 2, len(items) - 1):
+                    assert batch[k] == store.locate(ds, int(items[k]), reader).node_id
+            dead = [c for c, reps in enumerate(man.chunk_nodes) if not reps]
+            if dead:
+                # items whose chunk lost every replica fail loudly, like the
+                # scalar path, instead of returning a stale node
+                with pytest.raises(StripeError, match="no replicas"):
+                    store.locate_batch(
+                        ds,
+                        np.asarray([dead[0] * man.items_per_chunk], dtype=np.int64),
+                        reader,
+                    )
+
+
+@settings(max_examples=40, deadline=None)
+@given(ops=st.lists(st.integers(0, 2**16), min_size=1, max_size=30))
+def test_fill_state_bookkeeping_is_consistent(ops):
+    """n_filled, filled_fraction, unfilled_chunks and the chunk mask all
+    describe the same chunk_filled vector at every step."""
+    clock, topo, store, cache = _cluster()
+    for v in ops:
+        _apply_op(clock, topo, store, cache, v)
+        for ds, man in store.manifests.items():
+            n_unfilled = len(store.unfilled_chunks(ds))
+            assert man.n_filled == man.n_chunks - n_unfilled
+            assert store.filled_fraction(ds) == man.n_filled / max(1, man.n_chunks)
+            mask = store.chunk_filled_mask(ds, np.arange(man.n_chunks))
+            assert int(mask.sum()) == man.n_filled
+            entry = cache.entries[ds]
+            if entry.state is CacheState.CACHED:
+                assert man.n_filled == man.n_chunks

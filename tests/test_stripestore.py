@@ -108,6 +108,47 @@ def test_locate_batch_vectorised_matches_scalar(topo, tmp_path):
         assert batch[i] == store.locate("ds", int(i), topo.nodes[1]).node_id
 
 
+def test_locate_batch_agrees_with_locate_after_maintenance(topo, tmp_path):
+    """Regression: the replication==1 fast path derived nodes from the
+    ORIGINAL round-robin layout (node_ids[chunk % nn]); after drain/
+    fail_node/repair rewrite chunk_nodes it returned stale nodes."""
+    store = _mk_store(topo, tmp_path)
+    store.create("ds", n_items=96, item_bytes=32, nodes=topo.nodes[:4],
+                 items_per_chunk=4, replication=1, materialize=False)
+    moved = store.drain("ds", node_id=1)          # rewrite chunk placements
+    assert moved > 0
+    items = np.arange(96)
+    batch = store.locate_batch("ds", items, topo.nodes[0])
+    for i in items:
+        assert batch[i] == store.locate("ds", int(i), topo.nodes[0]).node_id
+    assert not np.any(batch == 1)                  # drained node serves nothing
+
+    # unrepaired data loss (replication 1, node gone): healthy-chunk batches
+    # still serve; batches touching a lost chunk fail loudly like locate()
+    store.fail_node(0)
+    man = store.manifests["ds"]
+    healthy = [c for c, reps in enumerate(man.chunk_nodes) if reps]
+    dead = [c for c, reps in enumerate(man.chunk_nodes) if not reps]
+    assert dead, "node 0 held sole replicas"
+    ok_items = np.asarray([c * 4 for c in healthy])
+    batch = store.locate_batch("ds", ok_items, topo.nodes[3])
+    for k, i in enumerate(ok_items):
+        assert batch[k] == store.locate("ds", int(i), topo.nodes[3]).node_id
+    from repro.core import StripeError
+    with pytest.raises(StripeError, match="no replicas"):
+        store.locate_batch("ds", np.asarray([dead[0] * 4]), topo.nodes[3])
+
+    # same property after a node failure + repair cycle (replication 2)
+    store.create("ds2", n_items=64, item_bytes=32, nodes=topo.nodes[:4],
+                 items_per_chunk=4, replication=2, materialize=False)
+    store.fail_node(2)
+    store.repair("ds2")
+    items = np.arange(64)
+    batch = store.locate_batch("ds2", items, topo.nodes[3])
+    for i in items:
+        assert batch[i] == store.locate("ds2", int(i), topo.nodes[3]).node_id
+
+
 def test_drain_straggler_node(topo, tmp_path):
     """Straggler mitigation: drain() migrates a slow node's chunks to the
     least-loaded peers and every item stays readable (real bytes, CRC)."""

@@ -1,0 +1,377 @@
+"""Multi-tenant workload engine + eviction-under-load edge cases.
+
+Covers the contention protocol the engine adds on top of the single-scenario
+path: GPU queueing across job exits, dataset admission under capacity
+pressure (real LRU churn mid-simulation), reader pins blocking eviction,
+fill-plane cancellation when a FILLING dataset is evicted, and re-admission
+re-streaming exactly one dataset's worth of remote bytes.
+"""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    CacheFullError,
+    CacheManager,
+    CacheState,
+    ClusterScheduler,
+    DatasetSpec,
+    FillTracker,
+    HoardBackend,
+    HoardLoader,
+    JobMetrics,
+    PAPER,
+    PlacementEngine,
+    PrefetchScheduler,
+    SimClock,
+    StripeStore,
+    Topology,
+    TopologyConfig,
+    TrainingJob,
+    WorkloadJob,
+)
+
+# small workload: 1024 items x 1 KB, 64-item chunks -> 16 chunks of 64 KiB
+CAL = dataclasses.replace(
+    PAPER,
+    dataset_bytes=1024 * 1024.0,
+    dataset_items=1024,
+    batch_items=128,
+)
+KB = 1024
+
+
+def _cluster(n_nodes=4, capacity=1e12):
+    clock = SimClock()
+    # slow remote store (2 MB/s) so cold-start fills take visible simulated
+    # time relative to the tiny test workload's compute
+    topo = Topology(TopologyConfig(nodes_per_rack=n_nodes, remote_nic_bw=2e6), clock)
+    store = StripeStore(topo)
+    cache = CacheManager(
+        topo, store, clock, capacity_per_node=capacity,
+        items_per_chunk=64, fill_bw=CAL.fill_bw,
+    )
+    placement = PlacementEngine(topo, cache)
+    engine = ClusterScheduler(clock, topo, store, cache, placement, cal=CAL)
+    return clock, topo, store, cache, engine
+
+
+def _register(cache, name, items=1024):
+    cache.register(DatasetSpec(name, f"nfs://{name}", items, 1024))
+
+
+# --------------------------------------------------------------- engine core
+def test_arrivals_and_gpu_queueing():
+    """A job arriving while all GPUs are held queues until a job exits."""
+    clock, topo, store, cache, engine = _cluster(n_nodes=1)   # 1 node, 4 GPUs
+    _register(cache, "ds")
+    res = engine.run([
+        WorkloadJob("first", "ds", arrival=0.0, epochs=1),
+        WorkloadJob("second", "ds", arrival=0.0, epochs=1),
+    ])
+    a, b = res.record("first"), res.record("second")
+    assert a.phase == b.phase == "done"
+    assert a.started == 0.0
+    assert b.started >= a.finished          # queued for the node's GPUs
+    assert b.queued_s > 0
+    assert res.sim_seconds >= b.finished
+
+
+def test_warm_cache_job_beats_cold_start():
+    """Paper Section 1: a later job over the same dataset rides warm stripes
+    — its first epoch matches the cold job's steady epoch, not its fill."""
+    clock, topo, store, cache, engine = _cluster()
+    _register(cache, "ds")
+    res = engine.run([
+        WorkloadJob("cold", "ds", arrival=0.0, epochs=2),
+        WorkloadJob("warm", "ds", arrival=100.0, epochs=2),
+    ])
+    cold, warm = res.record("cold"), res.record("warm")
+    assert cold.admitted_cold and not warm.admitted_cold
+    assert warm.result.epoch_times[0] < 0.6 * cold.result.epoch_times[0]
+    # the fill streamed the dataset exactly once cluster-wide
+    fill_remote = res.metrics.total_matching("remote_bytes", "fill:")
+    assert fill_remote == pytest.approx(CAL.dataset_bytes)
+
+
+def test_mixed_datasets_churn_evict_and_readmit():
+    """Capacity pressure mid-simulation: admitting dataset b evicts idle a;
+    a later job wanting a re-admits it and re-streams exactly one dataset's
+    worth of remote bytes."""
+    # one dataset (256 KiB/node on 4 nodes) fits; two do not
+    clock, topo, store, cache, engine = _cluster(capacity=400 * KB)
+    _register(cache, "a")
+    _register(cache, "b")
+    res = engine.run([
+        WorkloadJob("job-a1", "a", arrival=0.0, epochs=1),
+        WorkloadJob("job-b", "b", arrival=200.0, epochs=1),
+        WorkloadJob("job-a2", "a", arrival=400.0, epochs=1),
+    ])
+    assert [ds for _t, ds in res.evictions()] == ["a", "b"]
+    assert [ds for _t, ds in res.readmissions()] == ["a"]
+    assert res.churned_datasets() == {"a"}
+    # dataset a was streamed twice (initial fill + re-fill), b once
+    assert res.metrics.jobs["fill:a"].counters["remote_bytes"] == pytest.approx(
+        2 * CAL.dataset_bytes
+    )
+    assert res.metrics.jobs["fill:b"].counters["remote_bytes"] == pytest.approx(
+        CAL.dataset_bytes
+    )
+    # the re-admitted run is a cold start again: epoch 1 slower than warm
+    assert res.record("job-a2").admitted_cold
+
+
+def test_job_waits_for_reader_to_exit_before_evicting():
+    """A dataset some job is actively reading is never the LRU victim: the
+    contending job waits in queued-cache until the reader exits."""
+    clock, topo, store, cache, engine = _cluster(capacity=400 * KB)
+    _register(cache, "a")
+    _register(cache, "b")
+    res = engine.run([
+        WorkloadJob("reader", "a", arrival=0.0, epochs=3),
+        # arrives while the reader is still filling dataset a (fill takes
+        # ~0.5 s at the throttled remote NIC)
+        WorkloadJob("contender", "b", arrival=0.1, epochs=1),
+    ])
+    reader, contender = res.record("reader"), res.record("contender")
+    assert contender.phase == "done"
+    # contender could not admit b while the reader held a's pin
+    assert contender.started >= reader.finished
+    assert [ds for _t, ds in res.evictions()] == ["a"]
+    assert res.evictions()[0][0] >= reader.finished
+
+
+def test_starved_job_raises_with_phase():
+    """A job whose dataset can never fit reports itself instead of hanging."""
+    clock, topo, store, cache, engine = _cluster(capacity=10 * KB)  # way too small
+    _register(cache, "huge")
+    with pytest.raises(RuntimeError, match=r"starved\[queued-cache\]"):
+        engine.run([WorkloadJob("starved", "huge", epochs=1)])
+
+
+def test_different_sized_datasets_get_their_own_calibration():
+    """Per-job cal derives from the catalog entry: a half-size dataset runs
+    half the steps and roughly half the epoch time."""
+    clock, topo, store, cache, engine = _cluster()
+    _register(cache, "full", items=1024)
+    _register(cache, "half", items=512)
+    res = engine.run([
+        WorkloadJob("jf", "full", arrival=0.0, epochs=1, fill="prepopulated"),
+        WorkloadJob("jh", "half", arrival=0.0, epochs=1, fill="prepopulated"),
+    ])
+    tf = res.record("jf").result.epoch_times[0]
+    th = res.record("jh").result.epoch_times[0]
+    assert 0.3 < th / tf < 0.7
+
+
+# ------------------------------------------------- eviction-under-load edges
+def test_evicting_filling_dataset_cancels_outstanding_fills():
+    """Eviction mid-fill: in-flight transfers land as no-ops, _pending_fill
+    does not leak, and the cancelled plane refuses further demands."""
+    clock, topo, store, cache, engine = _cluster()
+    _register(cache, "ds")
+    cache.admit("ds", topo.nodes[:4], on_demand=True)
+    fm = JobMetrics("fill")
+    tracker = FillTracker(clock, topo, cache, "ds", metrics=fm)
+    ev0 = tracker.demand(0)
+    ev5 = tracker.demand(5)
+    assert tracker.inflight                       # transfers outstanding
+    cache.evict("ds")                             # FILLING victim: cancel
+    assert tracker.cancelled
+    assert not tracker.inflight
+    clock.run()                                   # in-flight bytes drain...
+    assert not ev0.fired and not ev5.fired        # ...but land as no-ops
+    assert "ds" not in store.manifests
+    assert all(store.pending_fill_bytes(n.node_id) == 0 for n in topo.nodes)
+    assert all(store.bytes_on_node(n.node_id) == 0 for n in topo.nodes)
+    assert tracker.filled_events == 0
+    with pytest.raises(RuntimeError, match="cancelled"):
+        tracker.demand(1)
+
+
+def test_readmission_after_cancelled_fill_starts_clean():
+    """Re-admitting an evicted-while-FILLING dataset lays out a fresh,
+    fully-unfilled manifest; a new fill plane streams exactly one dataset."""
+    clock, topo, store, cache, engine = _cluster()
+    _register(cache, "ds")
+    cache.admit("ds", topo.nodes[:4], on_demand=True)
+    old = FillTracker(clock, topo, cache, "ds", metrics=JobMetrics("old"))
+    old.demand(3)
+    cache.evict("ds")
+    cache.admit("ds", topo.nodes[:4], on_demand=True)      # re-admission
+    assert store.filled_fraction("ds") == 0.0
+    assert cache.entries["ds"].admissions == 2
+    fm = JobMetrics("fill2")
+    fresh = FillTracker(clock, topo, cache, "ds", metrics=fm)
+    PrefetchScheduler(fresh).start(np.arange(CAL.dataset_items))
+    clock.run()
+    assert store.filled_fraction("ds") == 1.0
+    assert cache.is_cached("ds")
+    # the new plane fetched every chunk itself — the cancelled transfer from
+    # the old plane contributed nothing to the new layout
+    assert fm.counters["remote_bytes"] == pytest.approx(CAL.dataset_bytes)
+    assert fresh.filled_events == store.manifests["ds"].n_chunks
+
+
+def test_active_reader_is_never_lru_victim():
+    """LRU skips datasets with live readers even when they are the oldest."""
+    clock, topo, store, cache, engine = _cluster(capacity=600 * KB)
+    _register(cache, "old")
+    _register(cache, "new")
+    _register(cache, "third")
+    cache.admit("old", topo.nodes[:4])
+    cache.mark_filled("old")
+    cache.acquire("old")                          # a job is reading it
+    clock.now = 10.0
+    cache.admit("new", topo.nodes[:4])
+    cache.mark_filled("new")
+    cache.touch("new")
+    clock.now = 20.0
+    # both resident (512 KiB/node of 600); admitting third must evict: the
+    # LRU-oldest is "old" but it has a reader -> victim is "new"
+    cache.admit("third", topo.nodes[:4])
+    assert "old" in store.manifests
+    assert "new" not in store.manifests
+    with pytest.raises(ValueError, match="active readers"):
+        cache.evict("old")
+    cache.release("old")
+    cache.evict("old")                            # fine once released
+
+
+def test_admit_never_evicts_dataset_on_disjoint_nodes():
+    """Eviction during admit only targets datasets holding stripes on the
+    admission's node subset — the global LRU could be on disjoint nodes,
+    where evicting it frees nothing and destroys warm data for zero gain."""
+    clock, topo, store, cache, engine = _cluster(n_nodes=8, capacity=300 * KB)
+    _register(cache, "a")          # idle, LRU-oldest, on nodes 0-3
+    _register(cache, "b")          # reader-held, on nodes 4-7
+    _register(cache, "c")          # wants nodes 4-7
+    cache.admit("a", topo.nodes[:4])
+    cache.mark_filled("a")
+    clock.now = 10.0
+    cache.admit("b", topo.nodes[4:8])
+    cache.mark_filled("b")
+    cache.acquire("b")
+    with pytest.raises(CacheFullError, match="target nodes"):
+        cache.admit("c", topo.nodes[4:8])
+    assert "a" in store.manifests  # the disjoint LRU dataset survived
+
+
+def test_prefetch_evicted_mid_transfer_never_marks_cached():
+    """FILLING datasets are evictable, so a prefetch transfer can outlive
+    its dataset: the stale completion must not flip the evicted (or a
+    re-admitted, unfilled) dataset to CACHED."""
+    clock, topo, store, cache, engine = _cluster(capacity=400 * KB)
+    _register(cache, "a")
+    _register(cache, "b")
+    cache.prefetch("a", topo.nodes[:4])           # FILLING, transfer in flight
+    cache.admit("b", topo.nodes[:4])              # evicts idle FILLING 'a'
+    assert "a" not in store.manifests
+    # re-admit 'a' unfilled before the stale transfer lands
+    cache.evict("b")
+    cache.admit("a", topo.nodes[:4], on_demand=True)
+    clock.run()                                   # stale prefetch completes
+    assert not cache.is_cached("a")               # generation guard held
+    assert cache.entries["a"].state is CacheState.FILLING
+    assert store.filled_fraction("a") == 0.0
+
+
+def test_doomed_admission_does_not_destroy_warm_datasets():
+    """When even evicting every idle dataset on the target nodes cannot fit
+    the admission, admit() refuses up front instead of evicting some warm
+    datasets and failing anyway (they would all have to re-stream later)."""
+    clock, topo, store, cache, engine = _cluster(capacity=400 * KB)
+    _register(cache, "warm")
+    _register(cache, "giant", items=4096)         # 4 MiB >> 1.6 MiB aggregate
+    cache.admit("warm", topo.nodes[:4])
+    cache.mark_filled("warm")
+    with pytest.raises(CacheFullError, match="evicting every idle dataset"):
+        cache.admit("giant", topo.nodes[:4])
+    assert "warm" in store.manifests              # survived the doomed attempt
+
+
+def test_job_cal_respects_item_bytes():
+    """Same item count but bigger items is a different dataset geometry."""
+    clock, topo, store, cache, engine = _cluster()
+    cache.register(DatasetSpec("fat", "nfs://fat", 1024, 2048))
+    cal = engine.job_cal(WorkloadJob("j", "fat"))
+    assert cal.dataset_bytes == 1024 * 2048
+    assert cal.dataset_items == 1024
+
+
+def test_pinned_dataset_is_never_lru_victim():
+    clock, topo, store, cache, engine = _cluster(capacity=300 * KB)
+    _register(cache, "keep")
+    _register(cache, "want")
+    cache.admit("keep", topo.nodes[:4])
+    cache.mark_filled("keep")
+    cache.pin("keep")
+    with pytest.raises(CacheFullError):
+        cache.admit("want", topo.nodes[:4])
+    assert "keep" in store.manifests
+
+
+def test_afm_job_does_not_mark_ondemand_dataset_cached_early():
+    """An AFM-path job completing its *private* residency over an
+    on-demand-admitted dataset must not flip the dataset CACHED while the
+    manifest still has unfilled chunks — CACHED implies every chunk filled,
+    and a premature transition detaches the fill plane, disarming eviction
+    cancellation."""
+    clock, topo, store, cache, engine = _cluster()
+    _register(cache, "ds")
+    cache.admit("ds", topo.nodes[:4], on_demand=True)
+    jm = JobMetrics("afm")
+    be = HoardBackend(clock, topo, topo.nodes[0], CAL, cache=cache,
+                      dataset_id="ds", metrics=jm)          # no fill plane
+    job = TrainingJob("afm", clock, HoardLoader(be, CAL, epochs=1, seed=0), CAL,
+                      metrics=jm)
+    done = job.start()
+    clock.run()
+    assert done.fired
+    assert store.filled_fraction("ds") == 0.0   # AFM residency is per-job
+    assert cache.entries["ds"].state is CacheState.FILLING
+    # a fill plane attached later is still cancellable by eviction
+    tracker = FillTracker(clock, topo, cache, "ds", metrics=JobMetrics("f"))
+    tracker.demand(0)
+    cache.evict("ds")
+    assert tracker.cancelled
+    clock.run()                                  # in-flight chunk: no KeyError
+    assert "ds" not in store.manifests
+
+
+def test_mixed_fill_modes_end_consistent():
+    """ondemand + afm jobs over one dataset: the run completes and CACHED
+    coincides with a fully-filled manifest."""
+    clock, topo, store, cache, engine = _cluster()
+    _register(cache, "ds")
+    res = engine.run([
+        WorkloadJob("od", "ds", arrival=0.0, epochs=1, fill="ondemand"),
+        WorkloadJob("afm", "ds", arrival=0.05, epochs=1, fill="afm"),
+    ])
+    assert cache.is_cached("ds")
+    assert store.filled_fraction("ds") == 1.0
+    # the filled transition happened when the last chunk landed (>= the
+    # remote-NIC lower bound for streaming the dataset), not when the AFM
+    # job's private residency completed
+    filled_t = [e.t for e in res.cache_events if e.op == "filled"][0]
+    assert filled_t >= 0.99 * CAL.dataset_bytes / 2e6
+
+
+def test_scheduler_stops_cleanly_when_tracker_cancelled():
+    """A paced clairvoyant scheduler whose dataset is evicted mid-fill exits
+    instead of demanding through a cancelled plane."""
+    clock, topo, store, cache, engine = _cluster()
+    _register(cache, "ds")
+    cache.admit("ds", topo.nodes[:4], on_demand=True)
+    tracker = FillTracker(clock, topo, cache, "ds", metrics=JobMetrics("f"))
+    paced = PrefetchScheduler(tracker, max_inflight=2, window_chunks=4)
+    paced.start(np.arange(CAL.dataset_items))
+    clock.run()                                   # stalls at the window bound
+    assert 0.0 < store.filled_fraction("ds") < 1.0
+    cache.evict("ds")
+    paced.note_progress(16)                       # wake the stalled scheduler
+    clock.run()                                   # must terminate, not raise
+    assert tracker.cancelled
+    assert "ds" not in store.manifests
