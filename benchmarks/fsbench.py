@@ -1,0 +1,195 @@
+"""HoardFS microbenchmark: metadata latency, readahead, cold-vs-warm epochs.
+
+Three measurements back the filesystem subsystem's acceptance criteria:
+
+* **metadata ops** — real wall-clock latency of ``stat`` / ``lookup`` /
+  ``readdir`` / ``open+close`` over the ``/hoard/...`` namespace (these run
+  for real; only byte movement is simulated),
+* **readahead** — a path-reading sequential scan of a cold on-demand
+  dataset (epoch 1) and a warm re-scan (epoch 2): readahead hit rate per
+  epoch and remote bytes.  Acceptance: warm-epoch reads are >=90%%
+  readahead-served with zero remote traffic,
+* **posix vs iterator** — the same 2-epoch training job through
+  ``posix_loader`` (paths) and ``HoardBackend`` (iterator) must produce
+  bit-identical epoch metrics, and cold epoch 1 must exceed warm epoch 2.
+
+Run: ``PYTHONPATH=src python -m benchmarks.run --only fsbench``
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+
+from repro.core import (
+    PAPER,
+    CacheManager,
+    DatasetSpec,
+    FillTracker,
+    HoardBackend,
+    HoardLoader,
+    JobMetrics,
+    SimClock,
+    StripeStore,
+    Topology,
+    TopologyConfig,
+    TrainingJob,
+)
+from repro.fs import HoardFS, MetadataService, posix_loader
+
+from .common import Row
+
+# scaled-down dataset so the scan is item-accurate but fast: 16 MB, 16k items
+CAL = dataclasses.replace(
+    PAPER, dataset_bytes=16 * 1024 * 1024.0, dataset_items=16384, batch_items=512
+)
+IPC = 256                                  # items/chunk -> 64 chunks of 256 KB
+META_OPS = 2000
+
+
+def _cluster():
+    clock = SimClock()
+    topo = Topology(TopologyConfig(nodes_per_rack=4), clock)
+    store = StripeStore(topo)
+    cache = CacheManager(topo, store, clock, items_per_chunk=IPC, fill_bw=CAL.fill_bw)
+    cache.register(DatasetSpec("imagenet", "nfs://store/imagenet",
+                               CAL.dataset_items, int(CAL.item_bytes)))
+    return clock, topo, store, cache
+
+
+def _wall_us(fn, n=META_OPS) -> float:
+    t0 = time.perf_counter()
+    for _ in range(n):
+        fn()
+    return (time.perf_counter() - t0) * 1e6 / n
+
+
+def _scan(fs, paths, read_bytes):
+    for p in paths:
+        fd = fs.open(p)
+        while True:
+            res = fs.read(fd, read_bytes)
+            if res.nbytes == 0:
+                break
+            yield res.event
+        fs.close(fd)
+
+
+def _metadata_rows(rows, lines):
+    clock, topo, store, cache = _cluster()
+    cache.admit("imagenet", topo.nodes[:4], on_demand=True)
+    meta = MetadataService(store, items_per_file=4 * IPC)
+    fs = HoardFS(clock, topo, cache, meta, topo.nodes[0], cal=CAL)
+    shard = "/hoard/imagenet/shard-000007.bin"
+    ops = (
+        ("stat", lambda: meta.stat(shard)),
+        ("lookup", lambda: meta.lookup("/hoard/imagenet")),
+        ("readdir", lambda: meta.readdir("/hoard/imagenet")),
+        ("open_close", lambda: fs.close(fs.open(shard))),
+    )
+    lines.append(f"  {'metadata op':12s} {'us/call':>9s}   (wall clock, n={META_OPS})")
+    for name, fn in ops:
+        us = _wall_us(fn)
+        rows.append(Row(f"fsbench/{name}", us, f"n={META_OPS}"))
+        lines.append(f"  {name:12s} {us:9.2f}")
+
+
+def _readahead_rows(rows, lines):
+    clock, topo, store, cache = _cluster()
+    cache.admit("imagenet", topo.nodes[:4], on_demand=True)
+    meta = MetadataService(store, items_per_file=4 * IPC)   # 4 chunks/shard
+    fs = HoardFS(clock, topo, cache, meta, topo.nodes[0], cal=CAL)
+    paths = [f"/hoard/imagenet/{n}" for n in fs.readdir("/hoard/imagenet")]
+    read_bytes = int(IPC * CAL.item_bytes) // 2             # 2 reads per chunk
+
+    t0 = clock.now
+    clock.process(_scan(fs, paths, read_bytes))
+    clock.run()
+    cold_s = clock.now - t0
+    cold = fs.readahead_stats()
+    remote_cold = fs.metrics.counters["remote_bytes"]
+
+    t1 = clock.now
+    clock.process(_scan(fs, paths, read_bytes))
+    clock.run()
+    warm_s = clock.now - t1
+    warm = fs.readahead_stats()
+    warm_reads = warm["reads"] - cold["reads"]
+    warm_hits = warm["hits"] - cold["hits"]
+    warm_rate = warm_hits / max(1, warm_reads)
+    remote_warm = fs.metrics.counters["remote_bytes"] - remote_cold
+
+    rows.append(Row("fsbench/scan_cold", cold_s * 1e6,
+                    f"hit={cold['hit_rate']:.2f},remote={remote_cold/1e6:.0f}MB"))
+    rows.append(Row("fsbench/scan_warm", warm_s * 1e6,
+                    f"hit={warm_rate:.2f},remote={remote_warm/1e6:.0f}MB"))
+    lines.append(
+        f"  sequential scan (sim): cold {cold_s:.1f}s hit={cold['hit_rate']:.2f} "
+        f"remote={remote_cold/1e6:.0f}MB | warm {warm_s:.1f}s hit={warm_rate:.2f} "
+        f"remote={remote_warm/1e6:.0f}MB "
+        f"(windows={cold['windows_started']}, seeks={cold['seeks']})"
+    )
+    if warm_rate < 0.90 or remote_warm > 0:
+        raise AssertionError(
+            f"fsbench acceptance failed: warm readahead hit rate {warm_rate:.2f} "
+            f"(need >=0.90) with {remote_warm:.0f} remote bytes (need 0)"
+        )
+    if not cache.is_cached("imagenet"):
+        raise AssertionError("cold scan did not converge the dataset to CACHED")
+
+
+def _train(posix: bool):
+    clock, topo, store, cache = _cluster()
+    cache.admit("imagenet", topo.nodes[:4], on_demand=True)
+    jm = JobMetrics("job")
+    tracker = FillTracker(clock, topo, cache, "imagenet", metrics=JobMetrics("fill"))
+    if posix:
+        fs = HoardFS(clock, topo, cache, MetadataService(store), topo.nodes[0],
+                     cal=CAL, metrics=jm)
+        loader = posix_loader(fs, "/hoard/imagenet", CAL, epochs=2, seed=3,
+                              fill_plane=tracker)
+    else:
+        be = HoardBackend(clock, topo, topo.nodes[0], CAL, cache=cache,
+                          dataset_id="imagenet", metrics=jm, fill_plane=tracker)
+        loader = HoardLoader(be, CAL, epochs=2, seed=3)
+    job = TrainingJob("job", clock, loader, CAL, metrics=jm)
+    job.start()
+    clock.run()
+    return job.result
+
+
+def _train_rows(rows, lines):
+    it = _train(posix=False)
+    px = _train(posix=True)
+    identical = (it.epoch_times == px.epoch_times and it.step_times == px.step_times)
+    rows.append(Row("fsbench/posix_epoch1", px.epoch_times[0] * 1e6,
+                    f"bitident={identical}"))
+    rows.append(Row("fsbench/posix_epoch2", px.epoch_times[1] * 1e6,
+                    f"coldwarm={px.epoch_times[0]/px.epoch_times[1]:.2f}x"))
+    lines.append(
+        f"  posix-loader 2-epoch job: e1={px.epoch_times[0]:.1f}s (cold fill) "
+        f"e2={px.epoch_times[1]:.1f}s (warm); bit-identical to HoardBackend: {identical}"
+    )
+    if not identical:
+        raise AssertionError(
+            f"posix/iterator divergence: {px.epoch_times} vs {it.epoch_times}"
+        )
+    if not px.epoch_times[0] > px.epoch_times[1]:
+        raise AssertionError("cold epoch 1 should exceed warm epoch 2")
+
+
+def fsbench_rows():
+    rows: list[Row] = []
+    lines = [
+        "HoardFS — POSIX namespace latency, readahead, cold-vs-warm epochs "
+        f"({CAL.dataset_bytes/1e6:.0f} MB dataset, {IPC}-item chunks)"
+    ]
+    _metadata_rows(rows, lines)
+    _readahead_rows(rows, lines)
+    _train_rows(rows, lines)
+    return rows, lines
+
+
+if __name__ == "__main__":
+    for line in fsbench_rows()[1]:
+        print(line)

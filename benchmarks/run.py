@@ -18,6 +18,7 @@ def main() -> None:
 
     from . import paper_tables
     from .coldstart import coldstart_rows
+    from .fsbench import fsbench_rows
     from .ingest_demand import ingest_rows
     from .multitenant import multitenant_rows
     from .roofline_table import roofline_rows
@@ -35,20 +36,25 @@ def main() -> None:
         ("multitenant", multitenant_rows),
         ("roofline", roofline_rows),
         ("ingest", ingest_rows),
+        ("fsbench", fsbench_rows),
     ]
     if args.quick:
-        benches = [b for b in benches if b[0] in ("table3", "table5", "roofline", "ingest")]
+        benches = [
+            b for b in benches
+            if b[0] in ("table3", "table5", "roofline", "ingest", "fsbench")
+        ]
     if args.only:
         keep = set(args.only.split(","))
         benches = [b for b in benches if b[0] in keep]
 
-    all_rows, all_lines = [], []
+    all_rows, all_lines, failed = [], [], []
     for name, fn in benches:
         try:
             rows, lines = fn()
             all_rows.extend(rows)
             all_lines.extend(lines + [""])
         except Exception as err:  # keep the harness running; report at end
+            failed.append(name)
             all_lines.append(f"[{name}] FAILED: {err}")
             print(f"[{name}] FAILED: {err}", file=sys.stderr)
 
@@ -58,6 +64,8 @@ def main() -> None:
     print()
     for line in all_lines:
         print(line)
+    if failed:  # CI smoke job: a broken perf script must fail the build
+        sys.exit(f"benchmarks failed: {', '.join(failed)}")
 
 
 if __name__ == "__main__":

@@ -28,13 +28,20 @@ from .loader import (
     JobResult,
     LocalCopyBackend,
     RemoteBackend,
+    StripeDataPlane,
     TrainingJob,
 )
 from .metrics import ClusterMetrics, JobMetrics
 from .placement import JobSpec, Placement, PlacementEngine
 from .prefetch import FillTracker, PrefetchScheduler
 from .simclock import AllOf, Event, Resource, SimClock
-from .stripestore import ChunkCorruption, StripeError, StripeManifest, StripeStore
+from .stripestore import (
+    MANIFEST_SCHEMA_VERSION,
+    ChunkCorruption,
+    StripeError,
+    StripeManifest,
+    StripeStore,
+)
 from .tiers import LRUCache, LRUStackModel, PagePool, buffer_cache_items
 from .topology import Node, Topology, TopologyConfig
 from .workload import (
@@ -50,10 +57,10 @@ __all__ = [
     "CacheState", "ChunkCorruption", "ClusterMetrics", "ClusterScheduler",
     "DatasetSpec", "Event", "EvictionPolicy", "FillTracker", "HoardBackend",
     "HoardLoader", "JobMetrics", "JobRecord", "JobResult", "JobSpec", "LRUCache",
-    "LRUStackModel", "LocalCopyBackend", "Node", "PAPER", "PagePool", "Placement",
-    "PlacementEngine", "PrefetchScheduler", "RemoteBackend", "Resource",
-    "ScenarioResult", "SimClock", "StripeError", "StripeManifest", "StripeStore",
-    "Topology", "TopologyConfig", "TrainingJob", "WorkloadCalibration",
-    "WorkloadJob", "WorkloadResult", "buffer_cache_items", "build_cluster",
-    "run_scenario", "stable_seed",
+    "LRUStackModel", "LocalCopyBackend", "MANIFEST_SCHEMA_VERSION", "Node",
+    "PAPER", "PagePool", "Placement", "PlacementEngine", "PrefetchScheduler",
+    "RemoteBackend", "Resource", "ScenarioResult", "SimClock", "StripeDataPlane",
+    "StripeError", "StripeManifest", "StripeStore", "Topology", "TopologyConfig",
+    "TrainingJob", "WorkloadCalibration", "WorkloadJob", "WorkloadResult",
+    "buffer_cache_items", "build_cluster", "run_scenario", "stable_seed",
 ]

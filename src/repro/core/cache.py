@@ -347,7 +347,13 @@ class CacheManager:
         return e is not None and e.state is CacheState.CACHED
 
     def ls(self) -> list[dict]:
-        """The `query cached datasets` API."""
+        """The `query cached datasets` API.
+
+        Reports the reader-pin count (``active_readers``, the workload
+        engine's eviction guard) and live fill progress per dataset, so an
+        operator — or :meth:`repro.fs.HoardFS.statfs` — can see a FILLING
+        dataset converge and which datasets are eviction-immune right now.
+        """
         return [
             {
                 "dataset": e.spec.dataset_id,
@@ -357,6 +363,8 @@ class CacheManager:
                 "pinned": e.pinned,
                 "active_readers": e.active_readers,
                 "last_access": e.last_access,
+                "fill_progress": self.fill_progress(e.spec.dataset_id),
+                "admissions": e.admissions,
             }
             for e in self.entries.values()
         ]

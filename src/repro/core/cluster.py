@@ -22,7 +22,13 @@ from .placement import PlacementEngine
 from .simclock import SimClock
 from .stripestore import StripeStore
 from .topology import Topology, TopologyConfig
-from .workload import ClusterScheduler, WorkloadJob, WorkloadResult, stable_seed
+from .workload import (
+    CACHED_BACKENDS,
+    ClusterScheduler,
+    WorkloadJob,
+    WorkloadResult,
+    stable_seed,
+)
 
 
 @dataclass
@@ -125,8 +131,9 @@ def run_scenario(
     cache.register(spec)
 
     # ---- placement: paper default = 1 job per node, dataset striped on all
+    cached_backend = backend in CACHED_BACKENDS
     if cache_nodes is None:
-        cache_nodes = [n.node_id for n in topo.nodes[:4]] if backend == "hoard" else []
+        cache_nodes = [n.node_id for n in topo.nodes[:4]] if cached_backend else []
     cnodes = [topo.node(i) for i in cache_nodes] if cache_nodes else []
 
     if fill not in ("afm", "prepopulated", "ondemand"):
@@ -135,7 +142,7 @@ def run_scenario(
         # prefetch books a whole-dataset transfer + mark_filled of its own;
         # combining it with another fill model double-streams the dataset
         raise ValueError(f"prefetch=True conflicts with fill={fill!r}")
-    if backend == "hoard":
+    if cached_backend:
         # the scenario contract: the dataset is admitted at t=0, before any
         # job runs.  For fill="ondemand" the engine wires the fill plane:
         # job0 (fill_driver) creates the FillTracker + clairvoyant schedule

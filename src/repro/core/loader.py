@@ -27,7 +27,7 @@ from .cache import CacheManager, CacheState
 from .calibration import PAPER, WorkloadCalibration
 from .metrics import JobMetrics
 from .simclock import Event, Resource, SimClock
-from .stripestore import StripeStore
+from .stripestore import StripeError, StripeStore
 from .tiers import LRUStackModel, PagePool, buffer_cache_items
 from .topology import Node, Topology
 
@@ -148,6 +148,180 @@ class LocalCopyBackend(_Backend):
         return self.clock.all_of(flows)
 
 
+class StripeDataPlane:
+    """Shared tri-state read engine: stripe hit / fill join / remote fall-through.
+
+    One instance serves one (dataset, reader node) pair.  Two consumers
+    resolve reads through it so they book *byte-identical* flows on the
+    simulated fabric:
+
+    * :class:`HoardBackend` — the iterator-transparency surface (R4 adapted
+      to JAX),
+    * :class:`repro.fs.HoardFS` — the POSIX-façade filesystem, whose
+      ``pread``/``pread_batch`` paths translate byte ranges into the same
+      item arrays.
+
+    Classification per item (the on-demand tri-state):
+
+    1. *stripe hit* — the item's chunk is resident; read from the closest
+       replica (local NVMe, or a peer's stripe across the fabric),
+    2. *fill join* — the chunk's remote->stripe transfer is already in
+       flight; wait for it, then stripe-read,
+    3. *remote fall-through* — start the chunk's fill now via the shared
+       :class:`~repro.core.prefetch.FillTracker`; the fetched chunk lands in
+       the StripeStore so the dataset converges to fully cached.
+
+    ``fill_plane=None`` is the fully-cached configuration: every chunk must
+    already be filled (a read of an unfilled chunk with no fill plane is a
+    loud error, not a silent remote fetch).  ``positions=None`` skips the
+    pagepool stack-distance model — the POSIX scalar-read path uses this,
+    since that model is calibrated for epoch-permutation batch access.
+    """
+
+    def __init__(
+        self,
+        clock: SimClock,
+        topology: Topology,
+        node: Node,
+        cal: WorkloadCalibration,
+        *,
+        cache: CacheManager,
+        dataset_id: str,
+        pagepool: PagePool,
+        metrics: Optional[JobMetrics] = None,
+        fill_plane=None,
+        prefetcher=None,
+    ):
+        self.clock = clock
+        self.topology = topology
+        self.node = node
+        self.cal = cal
+        self.cache = cache
+        self.dataset_id = dataset_id
+        self.client = Resource(f"{node.name}.gpfs_client", 1.0)  # seconds/second
+        self.pagepool = pagepool
+        self.metrics = metrics
+        # on-demand fill plane (prefetch.FillTracker) + optional scheduler
+        # to heartbeat consumer progress to (prefetch.PrefetchScheduler)
+        self.fill_plane = fill_plane
+        self.prefetcher = prefetcher
+        self._chunks_seen: Optional[np.ndarray] = None
+
+    def _manifest(self):
+        return self.cache.store.manifests[self.dataset_id]
+
+    # ---------------------------------------------------------- flow booking
+    def stripe_flows(self, items: np.ndarray) -> tuple[list[Event], float]:
+        """Book stripe reads (local NVMe or peer replica) for ``items``.
+
+        Network + source-disk flows per stripe source; rarely binding at
+        paper scale but mechanistically present (misplacement and
+        many-jobs-per-cache-node scenarios make them bind).
+        """
+        flows: list[Event] = []
+        if len(items) == 0:
+            return flows, 0.0
+        total = float(len(items)) * self.cal.item_bytes
+        src_nodes = self.cache.store.locate_batch(self.dataset_id, items, self.node)
+        for src_id in np.unique(src_nodes):
+            nbytes = float((src_nodes == src_id).sum()) * self.cal.item_bytes
+            src = self.topology.node(int(src_id))
+            path = [src.nvme, *self.topology.path(src, self.node)]
+            flows.append(self.clock.transfer(path, nbytes))
+            if self.metrics:
+                if src.node_id == self.node.node_id:
+                    self.metrics.count("local_stripe_bytes", nbytes)
+                else:
+                    self.metrics.count("peer_bytes", nbytes)
+                    self.metrics.count_link(src.node_id, self.node.node_id, nbytes)
+        if self.metrics:
+            self.metrics.count("stripe_bytes", total)
+        return flows, total
+
+    def client_flow(self, served_bytes: float, stripe_bytes: float) -> Optional[Event]:
+        """GPFS-client CPU: RPC cost on every byte served from the stripes
+        or the pagepool, plus data-move cost on stripe misses (class doc)."""
+        client_seconds = (
+            served_bytes / self.cal.stripe_rpc_bw + stripe_bytes / self.cal.stripe_move_bw
+        )
+        if client_seconds > 0:
+            return self.clock.transfer([self.client], client_seconds)
+        return None
+
+    # ----------------------------------------------------------------- reads
+    def filled_mask(self, item_ids: np.ndarray) -> np.ndarray:
+        """Per-item bool mask: is the item's chunk resident in the stripes?"""
+        if self.fill_plane is not None:
+            return self.fill_plane.filled_mask_for_items(item_ids)
+        man = self._manifest()
+        return self.cache.store.chunk_filled_mask(
+            self.dataset_id, item_ids // man.items_per_chunk
+        )
+
+    def ondemand_io(self, item_ids, epoch, positions) -> Event:
+        """Tri-state batch IO over the shared fill plane (see class doc).
+
+        ``positions=None`` disables the pagepool model (POSIX byte streams);
+        otherwise identical to what :meth:`HoardBackend.batch_io` books in
+        on-demand mode.
+        """
+        if positions is None:
+            hits = np.zeros(len(item_ids), dtype=bool)
+        else:
+            hits = self.pagepool.access_epoch_batch(item_ids, epoch, positions)
+        filled = self.filled_mask(item_ids)
+        blocked_items = item_ids[(~filled) & (~hits)]
+        if len(blocked_items) and self.fill_plane is None:
+            raise StripeError(
+                f"{self.dataset_id}: read of unfilled chunk(s) with no fill "
+                f"plane attached (dataset not fully cached?)"
+            )
+
+        flows, stripe_now = self.stripe_flows(item_ids[filled & (~hits)])
+        # pagepool hits are served inside the client daemon: client RPC cost
+        # only, same as the AFM-mode model (no separate RAM flow)
+        hit_bytes = float(hits.sum()) * self.cal.item_bytes
+        if hit_bytes and self.metrics:
+            self.metrics.count("ram_bytes", hit_bytes)
+        client = self.client_flow(stripe_now + hit_bytes, stripe_now)
+        if client is not None:
+            flows.append(client)
+
+        fill_events = []
+        if len(blocked_items):
+            for c in np.unique(self.fill_plane.chunks_of(blocked_items)):
+                ev = self.fill_plane.demand(int(c))
+                if ev is not None:
+                    fill_events.append(ev)
+        self.heartbeat(item_ids)
+
+        if not len(blocked_items):
+            return self.clock.all_of(flows)
+
+        def two_phase():
+            # phase A: immediate stripe/pagepool service + in-flight fills
+            if flows or fill_events:
+                yield self.clock.all_of([*flows, *fill_events])
+            # phase B: the just-landed chunks are served from the stripes
+            b_flows, stripe_b = self.stripe_flows(blocked_items)
+            b_client = self.client_flow(stripe_b, stripe_b)
+            if b_client is not None:
+                b_flows.append(b_client)
+            if b_flows:
+                yield self.clock.all_of(b_flows)
+
+        return self.clock.process(two_phase())
+
+    def heartbeat(self, item_ids: np.ndarray) -> None:
+        """Pace the clairvoyant prefetcher with distinct-chunks-consumed."""
+        if self.prefetcher is None or self.fill_plane is None:
+            return
+        if self._chunks_seen is None:
+            self._chunks_seen = np.zeros(self._manifest().n_chunks, dtype=bool)
+        self._chunks_seen[self.fill_plane.chunks_of(item_ids)] = True
+        self.prefetcher.note_progress(int(self._chunks_seen.sum()))
+
+
 class HoardBackend(_Backend):
     """Hoard: stripe-store reads + pagepool; two miss-path models.
 
@@ -157,19 +331,10 @@ class HoardBackend(_Backend):
     all booked at the calibrated AFM miss-service rate.  Each job fills its
     own residency, so N cold jobs stream the dataset N times.
 
-    **On-demand mode** (``fill_plane`` given): the shared, chunk-granular
-    fill data plane of :mod:`repro.core.prefetch`.  Every item in a step is
-    classified tri-state:
-
-    1. *stripe hit* — its chunk is resident; read from the closest replica
-       (local NVMe, or a peer's stripe across the fabric),
-    2. *fill join* — its chunk's remote->stripe transfer is already in
-       flight (started by the prefetch scheduler or another job); wait for
-       it, then stripe-read,
-    3. *remote read-through* — start the chunk's fill now; the fetched chunk
-       is written into the StripeStore as a side effect, so the cold dataset
-       converges to fully cached during epoch 1 and the remote store is
-       touched exactly once per chunk cluster-wide.
+    **On-demand mode** (``fill_plane`` given): delegates each step to the
+    shared :class:`StripeDataPlane`, which classifies every item tri-state
+    (stripe hit / fill join / remote fall-through) over the chunk-granular
+    fill data plane of :mod:`repro.core.prefetch`.
 
     The GPFS client is modelled as a per-job *service-time* resource: every
     read (hit or miss — pagepool hits are served inside the client daemon)
@@ -199,20 +364,32 @@ class HoardBackend(_Backend):
         super().__init__(clock, topology, node, cal)
         self.cache = cache
         self.dataset_id = dataset_id
-        self.client = Resource(f"{node.name}.gpfs_client", 1.0)  # seconds/second
         self.fill_client = Resource(f"{node.name}.afm_fill", cal.fill_bw)
         mdr = cal.default_mdr if mdr is None else mdr
         n = self.cache.entries[dataset_id].spec.n_items
-        self.pagepool = PagePool(n, buffer_cache_items(mdr, n))
+        self.plane = StripeDataPlane(
+            clock, topology, node, cal,
+            cache=cache, dataset_id=dataset_id,
+            pagepool=PagePool(n, buffer_cache_items(mdr, n)),
+            metrics=metrics, fill_plane=fill_plane, prefetcher=prefetcher,
+        )
         # item-granular residency: AFM fetches exactly what a miss touches;
         # striping (chunk) granularity is a separate, placement-only concept
         self._resident = np.zeros(n, dtype=bool)
         self.metrics = metrics
-        # on-demand fill plane (prefetch.FillTracker) + optional scheduler
-        # to heartbeat consumer progress to (prefetch.PrefetchScheduler)
-        self.fill_plane = fill_plane
-        self.prefetcher = prefetcher
-        self._chunks_seen: Optional[np.ndarray] = None
+
+    # convenience views into the shared data plane (tests, examples)
+    @property
+    def pagepool(self) -> PagePool:
+        return self.plane.pagepool
+
+    @property
+    def fill_plane(self):
+        return self.plane.fill_plane
+
+    @property
+    def prefetcher(self):
+        return self.plane.prefetcher
 
     def _manifest(self):
         return self.cache.store.manifests[self.dataset_id]
@@ -223,50 +400,12 @@ class HoardBackend(_Backend):
             self._resident[:] = True
         self.cache.touch(self.dataset_id)
 
-    # ---------------------------------------------------------- flow booking
-    def _stripe_flows(self, items: np.ndarray) -> tuple[list[Event], float]:
-        """Book stripe reads (local NVMe or peer replica) for ``items``.
-
-        Network + source-disk flows per stripe source; rarely binding at
-        paper scale but mechanistically present (misplacement and
-        many-jobs-per-cache-node scenarios make them bind).
-        """
-        flows: list[Event] = []
-        if len(items) == 0:
-            return flows, 0.0
-        total = float(len(items)) * self.cal.item_bytes
-        src_nodes = self.cache.store.locate_batch(self.dataset_id, items, self.node)
-        for src_id in np.unique(src_nodes):
-            nbytes = float((src_nodes == src_id).sum()) * self.cal.item_bytes
-            src = self.topology.node(int(src_id))
-            path = [src.nvme, *self.topology.path(src, self.node)]
-            flows.append(self.clock.transfer(path, nbytes))
-            if self.metrics:
-                if src.node_id == self.node.node_id:
-                    self.metrics.count("local_stripe_bytes", nbytes)
-                else:
-                    self.metrics.count("peer_bytes", nbytes)
-                    self.metrics.count_link(src.node_id, self.node.node_id, nbytes)
-        if self.metrics:
-            self.metrics.count("stripe_bytes", total)
-        return flows, total
-
-    def _client_flow(self, served_bytes: float, stripe_bytes: float) -> Optional[Event]:
-        """GPFS-client CPU: RPC cost on every byte served from the stripes
-        or the pagepool, plus data-move cost on stripe misses (class doc)."""
-        client_seconds = (
-            served_bytes / self.cal.stripe_rpc_bw + stripe_bytes / self.cal.stripe_move_bw
-        )
-        if client_seconds > 0:
-            return self.clock.transfer([self.client], client_seconds)
-        return None
-
     # ------------------------------------------------------------------- io
     def batch_io(self, item_ids, epoch, positions) -> Event:
         self.cache.touch(self.dataset_id)
-        if self.fill_plane is not None:
-            return self._ondemand_io(item_ids, epoch, positions)
-        hits = self.pagepool.access_epoch_batch(item_ids, epoch, positions)
+        if self.plane.fill_plane is not None:
+            return self.plane.ondemand_io(item_ids, epoch, positions)
+        hits = self.plane.pagepool.access_epoch_batch(item_ids, epoch, positions)
         resident = self._resident[item_ids]
 
         fill_mask = (~resident) & (~hits)
@@ -285,11 +424,11 @@ class HoardBackend(_Backend):
                 self.metrics.count("remote_bytes", fill_bytes)
                 self.metrics.count("fill_bytes", fill_bytes)
 
-        stripe_flows, stripe_total = self._stripe_flows(item_ids[resident & (~hits)])
+        stripe_flows, stripe_total = self.plane.stripe_flows(item_ids[resident & (~hits)])
         flows.extend(stripe_flows)
 
         served_bytes = stripe_total + float(hits.sum()) * self.cal.item_bytes
-        client = self._client_flow(served_bytes, stripe_total)
+        client = self.plane.client_flow(served_bytes, stripe_total)
         if client is not None:
             flows.append(client)
         if self.metrics and hits.any():
@@ -308,56 +447,6 @@ class HoardBackend(_Backend):
             ):
                 self.cache.mark_filled(self.dataset_id)
         return self.clock.all_of(flows)
-
-    def _ondemand_io(self, item_ids, epoch, positions) -> Event:
-        """Tri-state step IO over the shared fill plane (see class doc)."""
-        hits = self.pagepool.access_epoch_batch(item_ids, epoch, positions)
-        filled = self.fill_plane.filled_mask_for_items(item_ids)
-        blocked_items = item_ids[(~filled) & (~hits)]
-
-        flows, stripe_now = self._stripe_flows(item_ids[filled & (~hits)])
-        # pagepool hits are served inside the client daemon: client RPC cost
-        # only, same as the AFM-mode model (no separate RAM flow)
-        hit_bytes = float(hits.sum()) * self.cal.item_bytes
-        if hit_bytes and self.metrics:
-            self.metrics.count("ram_bytes", hit_bytes)
-        client = self._client_flow(stripe_now + hit_bytes, stripe_now)
-        if client is not None:
-            flows.append(client)
-
-        fill_events = []
-        if len(blocked_items):
-            for c in np.unique(self.fill_plane.chunks_of(blocked_items)):
-                ev = self.fill_plane.demand(int(c))
-                if ev is not None:
-                    fill_events.append(ev)
-        self._heartbeat(item_ids)
-
-        if not len(blocked_items):
-            return self.clock.all_of(flows)
-
-        def two_phase():
-            # phase A: immediate stripe/pagepool service + in-flight fills
-            if flows or fill_events:
-                yield self.clock.all_of([*flows, *fill_events])
-            # phase B: the just-landed chunks are served from the stripes
-            b_flows, stripe_b = self._stripe_flows(blocked_items)
-            b_client = self._client_flow(stripe_b, stripe_b)
-            if b_client is not None:
-                b_flows.append(b_client)
-            if b_flows:
-                yield self.clock.all_of(b_flows)
-
-        return self.clock.process(two_phase())
-
-    def _heartbeat(self, item_ids: np.ndarray) -> None:
-        """Pace the clairvoyant prefetcher with distinct-chunks-consumed."""
-        if self.prefetcher is None:
-            return
-        if self._chunks_seen is None:
-            self._chunks_seen = np.zeros(self._manifest().n_chunks, dtype=bool)
-        self._chunks_seen[self.fill_plane.chunks_of(item_ids)] = True
-        self.prefetcher.note_progress(int(self._chunks_seen.sum()))
 
 
 class HoardLoader:

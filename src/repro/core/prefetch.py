@@ -199,6 +199,22 @@ class PrefetchScheduler:
         self.cursor = 0                      # consumer progress, in chunks consumed
         self._progress_evt: Optional[Event] = None
         self.issued = 0                      # fills this scheduler initiated
+        self.stopped = False                 # set by stop(); the schedule exits
+
+    def stop(self) -> None:
+        """Abandon the remaining schedule (already-issued fills still land).
+
+        The non-clairvoyant driver (:class:`repro.fs.Readahead`) calls this
+        when the access pattern it predicted from breaks — a seek invalidates
+        the rest of a sequential prediction, so continuing to fill it would
+        be speculation, not prefetch.  Unlike :meth:`FillTracker.cancel`,
+        chunks already demanded are NOT dropped: they were correctly
+        predicted when issued and land normally.
+        """
+        self.stopped = True
+        if self._progress_evt is not None:     # unblock a paced, parked run
+            evt, self._progress_evt = self._progress_evt, None
+            evt.set()
 
     # ------------------------------------------------------------- schedule
     @staticmethod
@@ -224,12 +240,12 @@ class PrefetchScheduler:
     def _run(self, seq: np.ndarray):
         pending: list[Event] = []
         for k, chunk in enumerate(seq):
-            if self.tracker.cancelled:
-                return                   # dataset evicted mid-fill; stop cleanly
+            if self.tracker.cancelled or self.stopped:
+                return                   # dataset evicted / schedule abandoned
             while self.window_chunks is not None and k - self.cursor >= self.window_chunks:
                 self._progress_evt = self.clock.event()
                 yield self._progress_evt
-                if self.tracker.cancelled:
+                if self.tracker.cancelled or self.stopped:
                     return
             ev = self.tracker.demand(int(chunk))
             if ev is None:

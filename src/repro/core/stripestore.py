@@ -35,6 +35,13 @@ class StripeError(RuntimeError):
     pass
 
 
+# On-disk manifest schema.  v1 (implicit, pre-versioning) blobs carry no
+# ``schema_version`` key and may omit ``chunk_filled`` entirely — an empty
+# fill mask means "fully filled at create time" (see ``is_filled``).  v2 adds
+# the explicit version field so HoardFS metadata can evolve safely.
+MANIFEST_SCHEMA_VERSION = 2
+
+
 class ChunkCorruption(StripeError):
     pass
 
@@ -77,11 +84,22 @@ class StripeManifest:
         return item // self.items_per_chunk
 
     def to_json(self) -> str:
-        return json.dumps(self.__dict__)
+        return json.dumps({"schema_version": MANIFEST_SCHEMA_VERSION, **self.__dict__})
 
     @classmethod
     def from_json(cls, blob: str) -> "StripeManifest":
-        return cls(**json.loads(blob))
+        d = json.loads(blob)
+        version = d.pop("schema_version", 1)   # pre-versioning blobs are v1
+        if version > MANIFEST_SCHEMA_VERSION:
+            raise StripeError(
+                f"manifest schema v{version} is newer than this reader "
+                f"(v{MANIFEST_SCHEMA_VERSION}); refusing to guess"
+            )
+        if version < 2:
+            # legacy layout: the fill plane did not exist, so any missing
+            # fill mask means "fully filled at create time"
+            d.setdefault("chunk_filled", [])
+        return cls(**d)
 
 
 class StripeStore:

@@ -52,8 +52,11 @@ from .simclock import Event, SimClock
 from .stripestore import StripeStore
 from .topology import Node, Topology
 
-BACKENDS = ("hoard", "rem", "nvme")
+BACKENDS = ("hoard", "posix", "rem", "nvme")
 FILL_MODES = ("afm", "ondemand", "prepopulated")
+
+#: backends that read through the Hoard cache (admission + reader pins)
+CACHED_BACKENDS = ("hoard", "posix")
 
 
 def stable_seed(job_id: str) -> int:
@@ -94,6 +97,11 @@ class WorkloadJob:
             raise ValueError(f"unknown backend {self.backend!r}")
         if self.fill not in FILL_MODES:
             raise ValueError(f"unknown fill mode {self.fill!r}")
+        if self.backend == "posix" and self.fill == "afm":
+            # the AFM miss path models per-job residency inside the iterator
+            # backend; the filesystem's miss fall-through is the shared
+            # chunk-granular fill plane (use "ondemand" or "prepopulated")
+            raise ValueError('backend "posix" supports fill="ondemand"|"prepopulated"')
 
 
 @dataclass
@@ -184,6 +192,15 @@ class ClusterScheduler:
         # reading that dataset (heartbeats pace it; see prefetch.py)
         self._schedulers: dict[str, PrefetchScheduler] = {}
         self._wake: Optional[Event] = None
+        # one POSIX namespace per cluster, shared by every "posix" job's mount
+        self._meta = None
+
+    def _metadata(self):
+        if self._meta is None:
+            from repro.fs import MetadataService   # local: avoid import cycle
+
+            self._meta = MetadataService(self.store)
+        return self._meta
 
     # ----------------------------------------------------------- wake-up bus
     def _turnstile(self) -> Event:
@@ -257,7 +274,7 @@ class ClusterScheduler:
         while True:
             rec.phase = "queued-gpus"
             nodes = yield from self._acquire_nodes(spec, rec)
-            if spec.backend != "hoard":
+            if spec.backend not in CACHED_BACKENDS:
                 break
             wired = self._try_ensure_dataset(spec, rec, nodes)
             if wired is not None:
@@ -281,6 +298,20 @@ class ClusterScheduler:
                 clock, self.topology, node, cal, mdr=spec.mdr,
                 physical_copy=spec.physical_copy, metrics=jm,
             )
+        elif spec.backend == "posix":
+            # the POSIX-façade path: same cache, same fill plane, but the job
+            # reads /hoard/... shard files through a per-node HoardFS mount
+            from repro.fs import FileDataset, HoardFS   # local: avoid import cycle
+
+            fs = HoardFS(
+                clock, self.topology, self.cache, self._metadata(), node,
+                cal=cal, mdr=spec.mdr, metrics=jm,
+            )
+            be = FileDataset(
+                fs, f"/hoard/{spec.dataset_id}", cal=cal, mdr=spec.mdr,
+                fill_plane=tracker,
+                prefetcher=self._schedulers.get(spec.dataset_id),
+            )
         else:
             be = HoardBackend(
                 clock, self.topology, node, cal, cache=self.cache,
@@ -299,7 +330,9 @@ class ClusterScheduler:
         # ---- phase 4: teardown — free GPUs + reader pin, wake queued jobs
         rec.finished = clock.now
         self._release_nodes(rec)
-        if spec.backend == "hoard":
+        if spec.backend == "posix":
+            be.close()                      # drop per-handle reader pins
+        if spec.backend in CACHED_BACKENDS:
             self.cache.release(spec.dataset_id)
         rec.phase = "done"
         self._notify()

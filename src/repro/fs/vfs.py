@@ -1,0 +1,383 @@
+"""HoardFS: POSIX-façade file handles over the stripe store.
+
+This is the paper's Requirement 4 made literal: an unmodified, path-reading
+consumer ``open``s ``/hoard/<dataset>/shard-XXXXXX.bin``, ``read``s bytes and
+``close``s — and underneath, every byte resolves through exactly the same
+machinery as the iterator backends:
+
+* byte range -> item ids via :class:`~repro.fs.metadata.MetadataService`,
+* item ids -> tri-state classification (stripe hit / fill join / remote
+  fall-through) via the shared
+  :class:`~repro.core.loader.StripeDataPlane`, which books local-NVMe, peer
+  and remote flows on the simulated fabric *byte-identically* to
+  ``HoardBackend.batch_io``,
+* cold chunks fall through to the remote store via the dataset's
+  :class:`~repro.core.prefetch.FillTracker` (join-in-flight dedup included),
+* sequential handles drive the non-clairvoyant
+  :class:`~repro.fs.readahead.Readahead` window.
+
+Open handles take :meth:`CacheManager.acquire` reader pins for their whole
+lifetime, so LRU churn can never evict a dataset somebody has a file open
+in — the VFS equivalent of the workload engine's per-job pins.
+
+In materialized mode (``StripeStore(root=...)``) reads deliver the real
+bytes: ``ReadResult.data`` is populated when the simulated transfer lands.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, replace
+from typing import Optional, Sequence
+
+import numpy as np
+
+from ..core.cache import CacheManager, CacheState
+from ..core.calibration import PAPER, WorkloadCalibration
+from ..core.loader import StripeDataPlane
+from ..core.metrics import JobMetrics
+from ..core.prefetch import FillTracker
+from ..core.simclock import Event, SimClock
+from ..core.tiers import PagePool, buffer_cache_items
+from ..core.topology import Node, Topology
+from .metadata import ROOT, FileAttr, MetadataService
+from .readahead import Readahead
+
+
+@dataclass
+class ReadResult:
+    """Outcome of one ``read``/``pread``.
+
+    ``event`` fires when the bytes have crossed the simulated fabric (the
+    POSIX call "returns").  ``nbytes`` is the EOF-clamped byte count.  In
+    materialized mode ``data`` is filled in when the event fires — never
+    before, because an unfilled chunk's bytes do not exist yet.
+    """
+
+    event: Event
+    nbytes: int
+    data: Optional[bytes] = None
+
+
+@dataclass
+class OpenFile:
+    fd: int
+    attr: FileAttr
+    plane: StripeDataPlane
+    readahead: Readahead
+    pos: int = 0
+
+
+@dataclass
+class _RAStats:
+    hits: int = 0            # reads fully served from resident chunks
+    blocked: int = 0         # reads that waited on at least one fill
+    seeks: int = 0
+    sequential_reads: int = 0
+    windows_started: int = 0
+
+    def fold(self, ra: Readahead) -> None:
+        self.seeks += ra.seeks
+        self.sequential_reads += ra.sequential_reads
+        self.windows_started += ra.windows_started
+
+
+class HoardFS:
+    """One node's mount of the Hoard namespace (think: a FUSE mount).
+
+    Reads issued through this instance originate at ``node`` — locality,
+    peer-stripe traffic and NIC contention are all computed from that
+    vantage point, exactly as for an iterator job placed on the node.
+    """
+
+    def __init__(
+        self,
+        clock: SimClock,
+        topology: Topology,
+        cache: CacheManager,
+        meta: MetadataService,
+        node: Node,
+        *,
+        cal: WorkloadCalibration = PAPER,
+        mdr: Optional[float] = None,
+        metrics: Optional[JobMetrics] = None,
+        readahead_window: Optional[int] = 8,
+        readahead_inflight: int = 4,
+        readahead_min_streak: int = 2,
+    ):
+        self.clock = clock
+        self.topology = topology
+        self.cache = cache
+        self.meta = meta
+        self.node = node
+        self.cal = cal
+        self.mdr = cal.default_mdr if mdr is None else mdr
+        self.metrics = metrics if metrics is not None else JobMetrics(f"hoardfs:{node.name}")
+        self.readahead_window = readahead_window
+        self.readahead_inflight = readahead_inflight
+        self.readahead_min_streak = readahead_min_streak
+        self._handles: dict[int, OpenFile] = {}
+        self._next_fd = 3                     # 0/1/2 taken, as tradition demands
+        # data plane per dataset, keyed by admission generation so a plane
+        # never outlives an evict/re-admit cycle of its dataset
+        self._planes: dict[str, tuple[int, StripeDataPlane]] = {}
+        self._ra = _RAStats()
+
+    # ------------------------------------------------------------- data plane
+    def mount(
+        self,
+        dataset_id: str,
+        *,
+        fill_plane: Optional[FillTracker] = None,
+        prefetcher=None,
+        mdr: Optional[float] = None,
+        cal: Optional[WorkloadCalibration] = None,
+    ) -> str:
+        """Wire (or rewire) a dataset's data plane; returns its directory path.
+
+        Explicit mounting is optional — ``open`` auto-mounts with defaults —
+        but it is how a caller shares a fill plane / clairvoyant prefetcher
+        with other consumers (the workload engine does this), or overrides
+        the pagepool MDR and calibration per dataset.
+        """
+        entry = self._entry(dataset_id)
+        plane = self._build_plane(
+            dataset_id, fill_plane=fill_plane, prefetcher=prefetcher,
+            mdr=mdr, cal=cal,
+        )
+        self._planes[dataset_id] = (entry.admissions, plane)
+        return f"{ROOT}/{dataset_id}"
+
+    def _entry(self, dataset_id: str):
+        if dataset_id not in self.cache.entries:
+            raise FileNotFoundError(
+                2, "dataset striped but not registered with the CacheManager",
+                f"{ROOT}/{dataset_id}",
+            )
+        return self.cache.entries[dataset_id]
+
+    def _build_plane(
+        self, dataset_id, *, fill_plane=None, prefetcher=None, mdr=None, cal=None
+    ) -> StripeDataPlane:
+        entry = self._entry(dataset_id)
+        spec = entry.spec
+        if cal is None:
+            cal = self.cal
+            if (
+                cal.dataset_items != spec.n_items
+                or cal.dataset_bytes != float(spec.total_bytes)
+            ):
+                cal = replace(
+                    cal,
+                    dataset_bytes=float(spec.total_bytes),
+                    dataset_items=spec.n_items,
+                )
+        if fill_plane is None and entry.state is CacheState.FILLING:
+            plane = entry.fill_plane
+            if plane is not None and not plane.cancelled:
+                fill_plane = plane
+            else:
+                fill_plane = FillTracker(
+                    self.clock, self.topology, self.cache, dataset_id,
+                    metrics=self.metrics,
+                )
+        n = spec.n_items
+        mdr = self.mdr if mdr is None else mdr
+        return StripeDataPlane(
+            self.clock, self.topology, self.node, cal,
+            cache=self.cache, dataset_id=dataset_id,
+            pagepool=PagePool(n, buffer_cache_items(mdr, n)),
+            metrics=self.metrics, fill_plane=fill_plane, prefetcher=prefetcher,
+        )
+
+    def _plane(self, dataset_id: str) -> StripeDataPlane:
+        entry = self._entry(dataset_id)
+        got = self._planes.get(dataset_id)
+        if got is not None and got[0] == entry.admissions:
+            return got[1]
+        plane = self._build_plane(dataset_id)
+        self._planes[dataset_id] = (entry.admissions, plane)
+        return plane
+
+    # ---------------------------------------------------------- POSIX surface
+    def stat(self, path: str) -> FileAttr:
+        return self.meta.stat(path)
+
+    def readdir(self, path: str) -> list[str]:
+        return self.meta.readdir(path)
+
+    def open(self, path: str) -> int:
+        """Open a shard file; takes a reader pin for the handle's lifetime."""
+        attr = self.meta.lookup(path)
+        if attr.is_dir:
+            raise IsADirectoryError(21, "is a directory", path)
+        plane = self._plane(attr.dataset_id)
+        self.cache.acquire(attr.dataset_id)   # pin: LRU churn can't evict us
+        fd = self._next_fd
+        self._next_fd += 1
+        self._handles[fd] = OpenFile(
+            fd=fd, attr=attr, plane=plane,
+            readahead=Readahead(
+                plane.fill_plane, attr,
+                min_streak=self.readahead_min_streak,
+                window_chunks=self.readahead_window,
+                max_inflight=self.readahead_inflight,
+            ),
+        )
+        return fd
+
+    def close(self, fd: int) -> None:
+        h = self._handle(fd)
+        h.readahead.stop()
+        self._ra.fold(h.readahead)
+        self.cache.release(h.attr.dataset_id)
+        del self._handles[fd]
+
+    def _handle(self, fd: int) -> OpenFile:
+        if fd not in self._handles:
+            raise OSError(9, "bad file descriptor", str(fd))
+        return self._handles[fd]
+
+    def lseek(self, fd: int, offset: int, whence: int = 0) -> int:
+        h = self._handle(fd)
+        base = {0: 0, 1: h.pos, 2: h.attr.size}.get(whence)
+        if base is None:
+            raise ValueError(f"bad whence {whence}")
+        new = base + offset
+        if new < 0:
+            raise OSError(22, "invalid seek", h.attr.path)
+        h.pos = new
+        return new
+
+    def read(self, fd: int, size: int) -> ReadResult:
+        """Sequential read at the handle offset (advances it)."""
+        h = self._handle(fd)
+        res = self.pread(fd, size, h.pos)
+        h.pos += res.nbytes
+        return res
+
+    def pread(self, fd: int, size: int, offset: int) -> ReadResult:
+        """Positional read; the handle offset is not moved (POSIX pread)."""
+        h = self._handle(fd)
+        attr = h.attr
+        nbytes = min(max(0, size), max(0, attr.size - offset))
+        items = self.meta.items_for_range(attr, offset, nbytes)
+        if len(items) == 0:
+            done = self.clock.event()
+            done.set()
+            return ReadResult(event=done, nbytes=0, data=b"" if self._materialized(attr) else None)
+        # hit/blocked accounting BEFORE readahead may react to this read
+        if bool(h.plane.filled_mask(items).all()):
+            self._ra.hits += 1
+        else:
+            self._ra.blocked += 1
+        h.readahead.observe(offset, nbytes, int(items[0]))
+        self.cache.touch(attr.dataset_id)
+        ev = h.plane.ondemand_io(items, 0, None)   # positions=None: no pagepool
+        res = ReadResult(event=ev, nbytes=nbytes)
+        if self._materialized(attr):
+            # the payload exists only once the fills land; bind it at fire time
+            ev.on_fire(lambda _v, r=res: setattr(r, "data", self._read_bytes(attr, offset, r.nbytes)))
+        return res
+
+    def pread_batch(
+        self,
+        fds: Sequence[int],
+        offsets: np.ndarray,
+        *,
+        epoch: int = 0,
+        positions: Optional[np.ndarray] = None,
+    ) -> Event:
+        """Vectored positional read of one item per ``(fd, offset)`` pair.
+
+        The framework-adapter fast path (:class:`repro.fs.dataset.FileDataset`):
+        a DL input pipeline reads one sample per record, so the batch maps
+        1:1 onto item ids and the whole step books flows in one
+        ``StripeDataPlane.ondemand_io`` call — byte-identical to
+        ``HoardBackend.batch_io`` on the same ``(item_ids, epoch,
+        positions)``.  Per-handle readahead is not engaged here; batch
+        consumers bring their own fill driver (clairvoyant or none).
+        """
+        fds = np.asarray(fds, dtype=np.int64)
+        offsets = np.asarray(offsets, dtype=np.int64)
+        if len(fds) != len(offsets):
+            raise ValueError("fds and offsets length mismatch")
+        if len(fds) == 0:
+            done = self.clock.event()
+            done.set()
+            return done
+        item_ids = np.empty(len(fds), dtype=np.int64)
+        dataset_id = None
+        plane = None
+        for fd in np.unique(fds):
+            h = self._handle(int(fd))
+            if dataset_id is None:
+                dataset_id, plane = h.attr.dataset_id, h.plane
+            elif h.attr.dataset_id != dataset_id:
+                raise ValueError("pread_batch spans datasets; split the batch")
+            mask = fds == fd
+            item_ids[mask] = h.attr.item_lo + offsets[mask] // h.attr.item_bytes
+        self.cache.touch(dataset_id)
+        return plane.ondemand_io(item_ids, epoch, positions)
+
+    # ------------------------------------------------------------- statistics
+    def statfs(self) -> dict:
+        """Filesystem-wide view: capacity + per-dataset cache state.
+
+        Capacity figures aggregate over *every* node (any node can hold
+        stripes); a specific admission is still bounded by the free bytes of
+        its target subset, so ``free_bytes > 0`` does not promise the next
+        ``admit`` fits — check per-dataset ``nodes`` for locality.  The
+        dataset table is :meth:`CacheManager.ls` verbatim — reader-pin
+        counts (``active_readers``) and live ``fill_progress`` included, so
+        ``statfs`` during an on-demand fill shows the cache converging.
+        """
+        nodes = self.topology.nodes
+        capacity = self.cache.capacity_per_node * len(nodes)
+        used = float(sum(self.cache.store.bytes_on_node(n.node_id) for n in nodes))
+        return {
+            "capacity_bytes": capacity,
+            "used_bytes": used,
+            "free_bytes": capacity - used,
+            "open_handles": len(self._handles),
+            "datasets": self.cache.ls(),
+        }
+
+    def readahead_stats(self) -> dict:
+        """Aggregate readahead effectiveness across closed + live handles."""
+        agg = _RAStats(
+            hits=self._ra.hits, blocked=self._ra.blocked, seeks=self._ra.seeks,
+            sequential_reads=self._ra.sequential_reads,
+            windows_started=self._ra.windows_started,
+        )
+        for h in self._handles.values():
+            agg.fold(h.readahead)
+        reads = agg.hits + agg.blocked
+        return {
+            "reads": reads,
+            "hits": agg.hits,
+            "blocked": agg.blocked,
+            "hit_rate": agg.hits / reads if reads else 1.0,
+            "seeks": agg.seeks,
+            "sequential_reads": agg.sequential_reads,
+            "windows_started": agg.windows_started,
+        }
+
+    # ------------------------------------------------------------- real bytes
+    def _materialized(self, attr: FileAttr) -> bool:
+        man = self.cache.store.manifests.get(attr.dataset_id)
+        return bool(man is not None and man.materialized)
+
+    def _read_bytes(self, attr: FileAttr, offset: int, nbytes: int) -> bytes:
+        """Materialized payload for a byte range (post-fill; CRC-verified)."""
+        store = self.cache.store
+        ib = attr.item_bytes
+        out = bytearray()
+        start = offset
+        end = offset + nbytes
+        for item in MetadataService.items_for_range(attr, offset, nbytes):
+            blob = store.read_item(attr.dataset_id, int(item), self.node)
+            item_start = (int(item) - attr.item_lo) * ib   # file-relative
+            lo = max(0, start - item_start)
+            hi = min(ib, end - item_start)
+            out += blob[lo:hi]
+        return bytes(out)

@@ -100,6 +100,30 @@ def test_lifecycle_decoupled_from_jobs():
     assert listing["ds"]["state"] == "cached"
 
 
+def test_ls_reports_reader_pins_and_fill_progress():
+    """The query API must show live reader pins and fill progress — the
+    fields HoardFS.statfs surfaces to path-based consumers."""
+    clock, topo, store, cache = _cluster()
+    cache.register(_spec("ds", items=16, item_bytes=100))  # 4 chunks of 4
+    entry = cache.admit("ds", topo.nodes[:4], on_demand=True)
+    store.put_chunk("ds", 0)
+    cache.acquire("ds")
+    cache.acquire("ds")
+    row = {e["dataset"]: e for e in cache.ls()}["ds"]
+    assert row["state"] == "filling"
+    assert row["active_readers"] == 2
+    assert row["fill_progress"] == 0.25
+    assert row["admissions"] == 1
+    cache.release("ds")
+    cache.release("ds")
+    for c in range(1, 4):
+        store.put_chunk("ds", c)
+        cache.note_chunk_filled("ds")
+    row = {e["dataset"]: e for e in cache.ls()}["ds"]
+    assert row["state"] == "cached" and row["fill_progress"] == 1.0
+    assert entry.active_readers == 0
+
+
 @settings(max_examples=30, deadline=None)
 @given(
     sizes=st.lists(st.integers(1, 30), min_size=1, max_size=8),

@@ -1,0 +1,390 @@
+"""HoardFS: POSIX namespace, file handles, readahead, miss fall-through.
+
+Covers the four layers of the filesystem subsystem:
+
+* ``MetadataService`` — stat/readdir/lookup over ``/hoard/...`` derived
+  live from stripe manifests, plus its schema-versioned on-disk format,
+* ``HoardFS`` — open/read/pread/close with reader pins, tri-state read
+  resolution, ``statfs`` over ``CacheManager.ls``, real-bytes delivery in
+  materialized mode,
+* ``Readahead`` — sequential-window detection feeding the (non-clairvoyant)
+  ``PrefetchScheduler`` from observed offsets; seeks break the prediction,
+* ``FileDataset`` / ``posix_loader`` / ``backend="posix"`` — the acceptance
+  criterion: a training job consuming paths produces *bit-identical* epoch
+  metrics to the same job on ``HoardBackend``.
+"""
+
+import dataclasses
+
+import pytest
+
+from repro.core import (
+    PAPER,
+    CacheManager,
+    DatasetSpec,
+    FillTracker,
+    HoardBackend,
+    HoardLoader,
+    JobMetrics,
+    SimClock,
+    StripeError,
+    StripeStore,
+    Topology,
+    TopologyConfig,
+    TrainingJob,
+    run_scenario,
+)
+from repro.fs import FileDataset, HoardFS, MetadataService, posix_loader
+
+# small workload: 1024 items x 1 KB, 64-item chunks -> 16 chunks
+CAL = dataclasses.replace(
+    PAPER,
+    dataset_bytes=1024 * 1024.0,
+    dataset_items=1024,
+    batch_items=128,
+)
+IPC = 64                     # items per chunk
+IB = int(CAL.item_bytes)     # 1024 B
+
+
+def _cluster(n_nodes=4, root=None):
+    clock = SimClock()
+    topo = Topology(TopologyConfig(nodes_per_rack=n_nodes), clock)
+    store = StripeStore(topo, root=root)
+    cache = CacheManager(topo, store, clock, items_per_chunk=IPC, fill_bw=CAL.fill_bw)
+    cache.register(DatasetSpec("ds", "nfs://store/ds", CAL.dataset_items, IB))
+    return clock, topo, store, cache
+
+
+def _fs(clock, topo, store, cache, node=0, **kw):
+    return HoardFS(
+        clock, topo, cache, MetadataService(store), topo.nodes[node], cal=CAL, **kw
+    )
+
+
+def _scan(fs, paths, read_bytes=16 * 1024):
+    """Sequential whole-file scan process (yields each read's event)."""
+    for p in paths:
+        fd = fs.open(p)
+        while True:
+            res = fs.read(fd, read_bytes)
+            if res.nbytes == 0:
+                break
+            yield res.event
+        fs.close(fd)
+
+
+# --------------------------------------------------------------------- metadata
+def test_namespace_readdir_stat_lookup():
+    clock, topo, store, cache = _cluster()
+    cache.admit("ds", topo.nodes[:4], on_demand=True)
+    meta = MetadataService(store)
+    assert meta.readdir("/hoard") == ["ds"]
+    names = meta.readdir("/hoard/ds")
+    assert names[0] == "shard-000000.bin" and len(names) == 16   # 1 chunk/file
+    attr = meta.stat("/hoard/ds/shard-000003.bin")
+    assert (attr.size, attr.item_lo, attr.n_items, attr.item_bytes) == (
+        IPC * IB, 3 * IPC, IPC, IB,
+    )
+    root = meta.stat("/hoard")
+    assert root.is_dir
+    with pytest.raises(NotADirectoryError):
+        meta.readdir("/hoard/ds/shard-000000.bin")
+
+
+def test_short_last_shard_and_custom_geometry():
+    clock, topo, store, cache = _cluster()
+    cache.register(DatasetSpec("odd", "nfs://odd", 100, 10))
+    cache.admit("odd", topo.nodes[:4], items_per_chunk=8)
+    meta = MetadataService(store)
+    meta.set_items_per_file("odd", 30)                   # 100 items -> 4 files
+    assert meta.readdir("/hoard/odd") == [meta.file_name(i) for i in range(4)]
+    last = meta.stat("/hoard/odd/shard-000003.bin")
+    assert last.n_items == 10 and last.size == 100       # 100 - 3*30 items
+    items = meta.items_for_range(last, 25, 1000)         # clamped at EOF
+    assert items.tolist() == [92, 93, 94, 95, 96, 97, 98, 99]
+
+
+def test_lookup_enoent_paths():
+    clock, topo, store, cache = _cluster()
+    cache.admit("ds", topo.nodes[:4], on_demand=True)
+    meta = MetadataService(store)
+    for bad in (
+        "/nope", "/hoard/ghost", "/hoard/ds/shard-999999.bin",
+        "/hoard/ds/README", "/hoard/ds/shard-000000.bin/x",
+    ):
+        with pytest.raises(FileNotFoundError):
+            meta.lookup(bad)
+
+
+def test_namespace_follows_cache_lifecycle():
+    """Eviction removes the dataset's directory; re-admission restores it."""
+    clock, topo, store, cache = _cluster()
+    cache.admit("ds", topo.nodes[:4], on_demand=True)
+    meta = MetadataService(store)
+    assert "ds" in meta.readdir("/hoard")
+    cache.evict("ds")
+    assert meta.readdir("/hoard") == []
+    with pytest.raises(FileNotFoundError):
+        meta.stat("/hoard/ds")
+    cache.admit("ds", topo.nodes[:4], on_demand=True)
+    assert meta.stat("/hoard/ds").is_dir
+
+
+def test_metadata_schema_round_trip_and_future_version():
+    clock, topo, store, cache = _cluster()
+    cache.admit("ds", topo.nodes[:4], on_demand=True)
+    meta = MetadataService(store, items_per_file=128)
+    meta.set_items_per_file("ds", 256)
+    again = MetadataService.from_json(store, meta.to_json())
+    assert again.items_per_file("ds") == 256
+    assert again.default_items_per_file == 128
+    with pytest.raises(StripeError, match="newer"):
+        MetadataService.from_json(store, '{"schema_version": 99}')
+
+
+# -------------------------------------------------------------------------- vfs
+def test_open_handle_pins_dataset_against_eviction():
+    clock, topo, store, cache = _cluster()
+    cache.admit("ds", topo.nodes[:4], on_demand=True)
+    fs = _fs(clock, topo, store, cache)
+    fd = fs.open("/hoard/ds/shard-000000.bin")
+    assert cache.entries["ds"].active_readers == 1
+    with pytest.raises(ValueError, match="active readers"):
+        cache.evict("ds")
+    fs.close(fd)
+    assert cache.entries["ds"].active_readers == 0
+    cache.evict("ds")                                    # now allowed
+    with pytest.raises(OSError):
+        fs.read(fd, 1)                                   # closed fd is dead
+
+
+def test_sequential_scan_cold_converges_remote_once():
+    """A plain path-reading scan of a cold dataset converges it to CACHED
+    with the remote store touched exactly once per chunk (fall-through +
+    join-in-flight dedup), no iterator anywhere."""
+    clock, topo, store, cache = _cluster()
+    cache.admit("ds", topo.nodes[:4], on_demand=True)
+    fs = _fs(clock, topo, store, cache)
+    paths = [f"/hoard/ds/{n}" for n in fs.readdir("/hoard/ds")]
+    done = clock.process(_scan(fs, paths))
+    clock.run()
+    assert done.fired
+    assert store.filled_fraction("ds") == 1.0
+    assert cache.is_cached("ds")
+    assert fs.metrics.counters["remote_bytes"] == pytest.approx(CAL.dataset_bytes)
+    assert fs.statfs()["open_handles"] == 0
+
+
+def test_warm_scan_readahead_hit_rate_and_zero_remote():
+    """Acceptance: warm-epoch reads are >=90% readahead hits and never touch
+    the remote tier (here: 100% and zero new remote bytes)."""
+    clock, topo, store, cache = _cluster()
+    cache.admit("ds", topo.nodes[:4], on_demand=True)
+    fs = _fs(clock, topo, store, cache)
+    paths = [f"/hoard/ds/{n}" for n in fs.readdir("/hoard/ds")]
+    clock.process(_scan(fs, paths))
+    clock.run()                                           # epoch 1: cold fill
+    cold = fs.readahead_stats()
+    remote_cold = fs.metrics.counters["remote_bytes"]
+
+    clock.process(_scan(fs, paths))
+    clock.run()                                           # epoch 2: warm
+    warm = fs.readahead_stats()
+    warm_reads = warm["reads"] - cold["reads"]
+    warm_hits = warm["hits"] - cold["hits"]
+    assert warm_reads > 0
+    assert warm_hits / warm_reads >= 0.90                 # in fact 1.0
+    assert warm_hits == warm_reads
+    assert fs.metrics.counters["remote_bytes"] == remote_cold
+
+
+def test_readahead_fills_ahead_within_multichunk_shards():
+    """With shards spanning several chunks, the sequential window demands
+    chunks before the reader arrives: later chunks of each shard are hits
+    even on a completely cold dataset."""
+    clock, topo, store, cache = _cluster()
+    cache.admit("ds", topo.nodes[:4], on_demand=True)
+    fs = _fs(clock, topo, store, cache)
+    fs.meta.set_items_per_file("ds", 4 * IPC)             # 4 chunks per shard
+    paths = [f"/hoard/ds/{n}" for n in fs.readdir("/hoard/ds")]
+    assert len(paths) == 4
+    clock.process(_scan(fs, paths, read_bytes=IPC * IB))  # 1 read per chunk
+    clock.run()
+    st = fs.readahead_stats()
+    assert store.filled_fraction("ds") == 1.0
+    assert st["windows_started"] == len(paths)
+    # 4 reads/shard: the first blocks (starts the window), the predicted
+    # remainder of the shard is filled ahead -> at least half of all reads
+    # are served without blocking even though every chunk started cold
+    assert st["hits"] >= st["reads"] / 2
+    assert st["seeks"] == 0
+
+
+def test_seek_breaks_readahead_prediction():
+    clock, topo, store, cache = _cluster()
+    cache.admit("ds", topo.nodes[:4], on_demand=True)
+    fs = _fs(clock, topo, store, cache)
+    fs.meta.set_items_per_file("ds", 4 * IPC)
+    fd = fs.open("/hoard/ds/shard-000000.bin")
+    h = fs._handles[fd]
+
+    def jumpy():
+        yield fs.read(fd, IPC * IB).event                 # sequential...
+        yield fs.read(fd, IPC * IB).event                 # ...streak confirmed
+        assert h.readahead.scheduler is not None          # window running
+        yield fs.pread(fd, IPC * IB, 0).event             # seek back to 0
+        assert h.readahead.scheduler is None              # prediction dropped
+
+    clock.process(jumpy())
+    clock.run()
+    assert fs.readahead_stats()["seeks"] == 1
+    fs.close(fd)
+
+
+def test_pread_materialized_returns_real_bytes(tmp_path):
+    """Byte-range reads deliver the exact payload (cross-item, mid-item and
+    EOF-clamped ranges), CRC-verified through the stripe store."""
+    clock, topo, store, cache = _cluster(root=str(tmp_path))
+    payloads = {c: bytes([65 + c]) * (IPC * IB) for c in range(16)}
+    cache.admit("ds", topo.nodes[:4], materialize=True, payload=lambda c: payloads[c])
+    cache.mark_filled("ds")
+    fs = _fs(clock, topo, store, cache)
+    fd = fs.open("/hoard/ds/shard-000002.bin")            # covers chunk 2
+    res = fs.pread(fd, 3 * IB, IB // 2)                   # mid-item start
+    clock.run()
+    assert res.nbytes == 3 * IB
+    assert res.data == payloads[2][IB // 2 : IB // 2 + 3 * IB]
+    tail = fs.pread(fd, 10 * IB, (IPC - 1) * IB)          # clamped at EOF
+    clock.run()
+    assert tail.nbytes == IB
+    assert tail.data == payloads[2][-IB:]
+    past = fs.pread(fd, 16, IPC * IB + 5)                 # beyond EOF
+    assert (past.nbytes, past.data) == (0, b"")
+    fs.close(fd)
+
+
+def test_cold_materialized_read_delivers_bytes_after_fill(tmp_path):
+    """Miss fall-through in materialized mode: the payload appears exactly
+    when the simulated remote->stripe transfer lands, never before."""
+    clock, topo, store, cache = _cluster(root=str(tmp_path))
+    cache.admit("ds", topo.nodes[:4], on_demand=True, materialize=True)
+    fs = _fs(clock, topo, store, cache)
+    fd = fs.open("/hoard/ds/shard-000000.bin")
+    res = fs.read(fd, 2 * IB)
+    assert res.data is None                               # fill still in flight
+    clock.run()
+    assert res.event.fired
+    expected = store.read_item("ds", 0, topo.nodes[0]) + store.read_item(
+        "ds", 1, topo.nodes[0]
+    )
+    assert res.data == expected
+    fs.close(fd)
+
+
+def test_statfs_reports_pins_and_fill_progress():
+    clock, topo, store, cache = _cluster()
+    cache.admit("ds", topo.nodes[:4], on_demand=True)
+    fs = _fs(clock, topo, store, cache)
+    tracker = fs._plane("ds").fill_plane
+    for c in range(4):
+        tracker.demand(c)
+    clock.run()
+    fd = fs.open("/hoard/ds/shard-000000.bin")
+    sf = fs.statfs()
+    assert sf["open_handles"] == 1
+    assert sf["used_bytes"] == CAL.dataset_bytes
+    assert sf["free_bytes"] == sf["capacity_bytes"] - sf["used_bytes"]
+    (ds,) = [d for d in sf["datasets"] if d["dataset"] == "ds"]
+    assert ds["state"] == "filling"
+    assert ds["active_readers"] == 1                      # the open handle
+    assert ds["fill_progress"] == pytest.approx(4 / 16)   # live fill state
+    assert ds["admissions"] == 1
+    fs.close(fd)
+
+
+def test_unfilled_read_without_fill_plane_is_loud():
+    """A cached-mode plane asked for an unfilled chunk must fail, not
+    silently fall through to remote (that would hide accounting bugs)."""
+    clock, topo, store, cache = _cluster()
+    cache.admit("ds", topo.nodes[:4], on_demand=True)
+    fs = _fs(clock, topo, store, cache)
+    fs.mount("ds", fill_plane=None)
+    fs._planes["ds"][1].fill_plane = None                 # sever the plane
+    fd = fs.open("/hoard/ds/shard-000000.bin")
+    fs._handles[fd].plane.fill_plane = None
+    with pytest.raises(StripeError, match="no fill plane"):
+        fs.read(fd, IB)
+    fs.close(fd)
+
+
+# ------------------------------------------------------- FileDataset / loaders
+def _train_once(posix: bool, *, fill: str = "ondemand", seed: int = 7, epochs: int = 2):
+    clock, topo, store, cache = _cluster()
+    cache.admit("ds", topo.nodes[:4], on_demand=(fill == "ondemand"))
+    if fill == "prepopulated":
+        cache.mark_filled("ds")
+    jm = JobMetrics("job")
+    tracker = None
+    if fill == "ondemand":
+        tracker = FillTracker(clock, topo, cache, "ds", metrics=JobMetrics("fill"))
+    if posix:
+        fs = _fs(clock, topo, store, cache, metrics=jm)
+        loader = posix_loader(
+            fs, "/hoard/ds", CAL, epochs=epochs, seed=seed, fill_plane=tracker
+        )
+    else:
+        be = HoardBackend(
+            clock, topo, topo.nodes[0], CAL, cache=cache, dataset_id="ds",
+            metrics=jm, fill_plane=tracker,
+        )
+        loader = HoardLoader(be, CAL, epochs=epochs, seed=seed)
+    job = TrainingJob("job", clock, loader, CAL, metrics=jm)
+    job.start()
+    clock.run()
+    return job.result, jm, cache, loader
+
+
+@pytest.mark.parametrize("fill", ["ondemand", "prepopulated"])
+def test_posix_job_bit_identical_to_hoard_backend(fill):
+    """Acceptance: a TrainingJob consuming /hoard/... paths via FileDataset
+    produces bit-identical epoch (and step) metrics to the same job on
+    HoardBackend — the POSIX facade adds namespace + handles, not time."""
+    it_res, it_jm, *_ = _train_once(False, fill=fill)
+    fs_res, fs_jm, *_ = _train_once(True, fill=fill)
+    assert fs_res.epoch_times == it_res.epoch_times
+    assert fs_res.step_times == it_res.step_times
+    for key in ("stripe_bytes", "peer_bytes", "local_stripe_bytes", "ram_bytes"):
+        assert fs_jm.counters[key] == it_jm.counters[key]
+
+
+def test_file_dataset_handles_and_close():
+    res, jm, cache, loader = _train_once(True)
+    ds = loader.backend
+    assert isinstance(ds, FileDataset)
+    assert ds.open_files == 16                            # every shard touched
+    assert cache.entries["ds"].active_readers == 16       # one pin per handle
+    ds.close()
+    assert ds.open_files == 0
+    assert cache.entries["ds"].active_readers == 0
+    assert cache.is_cached("ds")                          # epoch-1 fill landed
+
+
+# ------------------------------------------------------------- workload engine
+def test_run_scenario_posix_matches_hoard():
+    """The whole engine path: N posix jobs over the shared clairvoyant fill
+    produce the same epoch times and remote traffic as N hoard jobs."""
+    kw = dict(epochs=2, n_jobs=2, fill="ondemand", cal=CAL)
+    hoard = run_scenario("hoard", **kw)
+    posix = run_scenario("posix", **kw)
+    assert posix.mean_epoch_times == hoard.mean_epoch_times
+    assert posix.metrics.total("remote_bytes") == hoard.metrics.total("remote_bytes")
+    rec = posix.workload.record("job0")
+    assert rec.phase == "done" and rec.dataset_state_at_start == "filling"
+
+
+def test_posix_rejects_afm_fill():
+    from repro.core import WorkloadJob
+
+    with pytest.raises(ValueError, match="posix"):
+        WorkloadJob(job_id="j", dataset_id="ds", backend="posix", fill="afm")

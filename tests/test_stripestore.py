@@ -1,11 +1,21 @@
 """Stripe store: round-trips, replication, corruption repair, node loss."""
 
+import dataclasses
+import json
 import os
 
 import numpy as np
 import pytest
 
-from repro.core import SimClock, StripeStore, Topology, TopologyConfig
+from repro.core import (
+    MANIFEST_SCHEMA_VERSION,
+    SimClock,
+    StripeError,
+    StripeManifest,
+    StripeStore,
+    Topology,
+    TopologyConfig,
+)
 from repro.core.stripestore import ChunkCorruption
 
 
@@ -147,6 +157,116 @@ def test_locate_batch_agrees_with_locate_after_maintenance(topo, tmp_path):
     batch = store.locate_batch("ds2", items, topo.nodes[3])
     for i in items:
         assert batch[i] == store.locate("ds2", int(i), topo.nodes[3]).node_id
+
+
+# ------------------------------------------------------------ manifest schema
+def test_manifest_schema_round_trip(topo, tmp_path):
+    store = _mk_store(topo, tmp_path)
+    man = store.create("ds", n_items=40, item_bytes=256, nodes=topo.nodes[:4],
+                       items_per_chunk=4, replication=2, materialize=True)
+    blob = man.to_json()
+    assert json.loads(blob)["schema_version"] == MANIFEST_SCHEMA_VERSION
+    again = StripeManifest.from_json(blob)
+    assert dataclasses.asdict(again) == dataclasses.asdict(man)
+
+
+def test_manifest_legacy_blob_back_compat():
+    """Pre-versioning blobs (no schema_version, empty/missing chunk_filled)
+    must load and read as fully filled — HoardFS metadata can evolve without
+    stranding old on-disk manifests."""
+    legacy = {
+        "dataset_id": "old", "n_items": 16, "item_bytes": 64,
+        "items_per_chunk": 4, "replication": 1, "node_ids": [0, 1],
+        "chunk_nodes": [[0], [1], [0], [1]], "chunk_crc": [0, 0, 0, 0],
+        "materialized": False,
+    }                                        # note: no chunk_filled at all
+    man = StripeManifest.from_json(json.dumps(legacy))
+    assert man.chunk_filled == []
+    assert man.n_filled == man.n_chunks == 4
+    assert all(man.is_filled(c) for c in range(4))
+    # empty-mask spelling round-trips unchanged through the current writer
+    again = StripeManifest.from_json(man.to_json())
+    assert again.chunk_filled == [] and again.n_filled == 4
+
+
+def test_manifest_future_schema_refused():
+    with pytest.raises(StripeError, match="newer"):
+        StripeManifest.from_json(json.dumps({"schema_version": MANIFEST_SCHEMA_VERSION + 1}))
+
+
+# ------------------------------------------- maintenance vs partially-filled
+def _partial_fill_setup(topo, tmp_path):
+    """Materialized on-demand dataset with chunks 0..3 filled, 4..7 pending."""
+    store = _mk_store(topo, tmp_path)
+    man = store.create("ds", n_items=32, item_bytes=64, nodes=topo.nodes[:4],
+                       items_per_chunk=4, materialize=True, prefill=False)
+    for c in range(4):
+        store.put_chunk("ds", c)
+    return store, man
+
+
+def _total_pending(store, topo):
+    return sum(store.pending_fill_bytes(n.node_id) for n in topo.nodes)
+
+
+def test_drain_preserves_fill_mask_on_partial_dataset(topo, tmp_path):
+    """drain() must move a filled chunk's real bytes but only retarget the
+    metadata of an unfilled one — and the chunk_filled mask itself must
+    survive the replica moves untouched."""
+    store, man = _partial_fill_setup(topo, tmp_path)
+    mask_before = list(man.chunk_filled)
+    pending_before = _total_pending(store, topo)
+    moved = store.drain("ds", node_id=1)
+    assert moved > 0
+    assert man.chunk_filled == mask_before              # mask survives the move
+    assert store.bytes_on_node(1) == 0
+    assert store.pending_fill_bytes(1) == 0
+    assert _total_pending(store, topo) == pending_before  # conserved, just moved
+    # filled chunks stay readable from their new homes (real bytes + CRC)
+    for item in range(16):
+        assert len(store.read_item("ds", item, topo.nodes[0])) == 64
+    # unfilled chunks were retargeted without inventing files on disk
+    for c in store.unfilled_chunks("ds"):
+        for nid in man.chunk_nodes[c]:
+            assert not os.path.exists(store._chunk_path("ds", nid, int(c)))
+    # the fill completes against the post-drain layout
+    for c in store.unfilled_chunks("ds"):
+        store.put_chunk("ds", int(c))
+    assert store.filled_fraction("ds") == 1.0
+    assert _total_pending(store, topo) == 0
+    for item in range(32):
+        assert len(store.read_item("ds", item, topo.nodes[0])) == 64
+
+
+def test_repair_after_node_loss_on_partial_dataset(topo, tmp_path):
+    """fail_node + repair mid-fill: filled chunks re-replicate with bytes,
+    unfilled chunks re-replicate as metadata only, and the eventual
+    put_chunk writes every (new) replica."""
+    store = _mk_store(topo, tmp_path)
+    man = store.create("ds", n_items=32, item_bytes=64, nodes=topo.nodes[:4],
+                       items_per_chunk=4, replication=2, materialize=True,
+                       prefill=False)
+    for c in range(4):
+        store.put_chunk("ds", c)
+    mask_before = list(man.chunk_filled)
+    store.fail_node(2)
+    under = [c for c, reps in enumerate(man.chunk_nodes) if len(reps) < 2]
+    assert under
+    created = store.repair("ds")
+    assert created == len(under)
+    assert man.chunk_filled == mask_before              # mask survives repair
+    assert all(len(reps) == 2 for reps in man.chunk_nodes)
+    # metadata-only repair: no files for unfilled chunks anywhere
+    for c in store.unfilled_chunks("ds"):
+        for nid in man.chunk_nodes[c]:
+            assert not os.path.exists(store._chunk_path("ds", nid, int(c)))
+    for c in store.unfilled_chunks("ds"):
+        store.put_chunk("ds", int(c))
+    # every replica of every chunk now holds verifiable bytes
+    for c, reps in enumerate(man.chunk_nodes):
+        for nid in reps:
+            assert len(store._read_chunk(man, nid, c)) == man.chunk_bytes
+    assert _total_pending(store, topo) == 0
 
 
 def test_drain_straggler_node(topo, tmp_path):
