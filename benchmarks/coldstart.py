@@ -22,7 +22,7 @@ Run: ``PYTHONPATH=src python -m benchmarks.run --only coldstart``
 
 from __future__ import annotations
 
-from repro.core import PAPER, run_scenario
+from repro.core import run_scenario
 
 from .common import Row, timed
 

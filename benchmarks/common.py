@@ -1,4 +1,15 @@
-"""Shared helpers for the paper-table benchmarks."""
+"""Shared helpers for the paper-table benchmarks.
+
+Besides the human-facing ``Row``/table output, benchmarks record
+*machine-readable* metrics via :func:`record_metric`.  Only **deterministic,
+simulated** quantities belong there (epoch seconds, remote bytes, hit rates,
+moved fractions) — never wall-clock timings, which vary with the CI runner.
+``benchmarks/run.py`` dumps each benchmark's metrics to ``BENCH_<name>.json``
+and gates them against the committed ``benchmarks/baseline.json``: any metric
+more than 10% worse than baseline fails the run (the CI perf-trajectory
+gate), and a baseline metric the benchmark no longer emits fails too, so
+perf coverage cannot silently rot.
+"""
 
 from __future__ import annotations
 
@@ -16,6 +27,26 @@ class Row:
 
     def csv(self) -> str:
         return f"{self.name},{self.us_per_call:.1f},{self.derived}"
+
+
+# benchmark name -> metric name -> {"value": float, "better": "lower"|"higher"}
+_METRICS: dict[str, dict[str, dict]] = {}
+
+
+def record_metric(bench: str, name: str, value: float, *, better: str = "lower") -> None:
+    """Register one deterministic metric for the perf-trajectory gate.
+
+    ``better`` declares the regression direction: ``"lower"`` (epoch time,
+    remote bytes, moved fraction) fails when the value grows >10% over
+    baseline; ``"higher"`` (hit rate, speedup) fails when it shrinks >10%.
+    """
+    if better not in ("lower", "higher"):
+        raise ValueError(f"better must be 'lower' or 'higher', got {better!r}")
+    _METRICS.setdefault(bench, {})[name] = {"value": float(value), "better": better}
+
+
+def collected_metrics() -> dict[str, dict[str, dict]]:
+    return _METRICS
 
 
 def timed(fn):

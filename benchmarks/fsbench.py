@@ -37,7 +37,7 @@ from repro.core import (
 )
 from repro.fs import HoardFS, MetadataService, posix_loader
 
-from .common import Row
+from .common import Row, record_metric
 
 # scaled-down dataset so the scan is item-accurate but fast: 16 MB, 16k items
 CAL = dataclasses.replace(
@@ -123,6 +123,13 @@ def _readahead_rows(rows, lines):
                     f"hit={cold['hit_rate']:.2f},remote={remote_cold/1e6:.0f}MB"))
     rows.append(Row("fsbench/scan_warm", warm_s * 1e6,
                     f"hit={warm_rate:.2f},remote={remote_warm/1e6:.0f}MB"))
+    # simulated scan profile (deterministic): the CI perf-trajectory gate
+    record_metric("fsbench", "scan_cold_s", cold_s, better="lower")
+    record_metric("fsbench", "scan_warm_s", warm_s, better="lower")
+    record_metric("fsbench", "cold_hit_rate", cold["hit_rate"], better="higher")
+    record_metric("fsbench", "warm_hit_rate", warm_rate, better="higher")
+    record_metric("fsbench", "remote_cold_bytes", remote_cold, better="lower")
+    record_metric("fsbench", "remote_warm_bytes", remote_warm, better="lower")
     lines.append(
         f"  sequential scan (sim): cold {cold_s:.1f}s hit={cold['hit_rate']:.2f} "
         f"remote={remote_cold/1e6:.0f}MB | warm {warm_s:.1f}s hit={warm_rate:.2f} "
@@ -166,6 +173,8 @@ def _train_rows(rows, lines):
                     f"bitident={identical}"))
     rows.append(Row("fsbench/posix_epoch2", px.epoch_times[1] * 1e6,
                     f"coldwarm={px.epoch_times[0]/px.epoch_times[1]:.2f}x"))
+    record_metric("fsbench", "posix_epoch1_s", px.epoch_times[0], better="lower")
+    record_metric("fsbench", "posix_epoch2_s", px.epoch_times[1], better="lower")
     lines.append(
         f"  posix-loader 2-epoch job: e1={px.epoch_times[0]:.1f}s (cold fill) "
         f"e2={px.epoch_times[1]:.1f}s (warm); bit-identical to HoardBackend: {identical}"

@@ -29,7 +29,7 @@ from repro.core import (
     build_cluster,
 )
 
-from .common import Row, timed
+from .common import Row, record_metric, timed
 
 GB = 1e9
 ITEM_B = int(PAPER.item_bytes)
@@ -84,6 +84,9 @@ def hp_sweep():
         raise AssertionError(f"warm trials not faster: {warm_e1:.1f} vs {cold_e1:.1f}")
     if not remote < 1.02 * PAPER.dataset_bytes / GB:
         raise AssertionError(f"fill not shared: {remote:.1f} GB remote")
+    record_metric("multitenant", "sweep_cold_epoch1_s", cold_e1, better="lower")
+    record_metric("multitenant", "sweep_warm_epoch1_s", warm_e1, better="lower")
+    record_metric("multitenant", "sweep_remote_gb", remote, better="lower")
     return res, cold_e1, warm_e1, lines
 
 
@@ -135,6 +138,7 @@ def churn():
         raise AssertionError(f"expected >=2 churned datasets, got {churned}")
     if not warm_e1 < 0.9 * cold_e1:
         raise AssertionError(f"warm not faster than cold: {warm_e1:.1f} vs {cold_e1:.1f}")
+    record_metric("multitenant", "churn_remote_gb", remote, better="lower")
     return res, cold_e1, warm_e1, lines
 
 

@@ -9,11 +9,10 @@ from __future__ import annotations
 import numpy as np
 
 from repro.core import PAPER, run_scenario
-from repro.core.cluster import build_cluster
 from repro.core.placement import PlacementEngine
 from repro.core.topology import Gb, Topology, TopologyConfig
 
-from .common import Row, epoch_profile, fps, project_total, timed
+from .common import Row, epoch_profile, fps, project_total, record_metric, timed
 
 
 # --------------------------------------------------------------- Table 1
@@ -74,6 +73,9 @@ def table3_projection():
         (res, su, e1, st), us = timed(lambda b=b: epoch_profile(b))
         profs[b] = (su, e1, st)
         rows.append(Row(f"table3/profile_{b}", us, f"e1={e1:.0f}s;steady={st:.0f}s"))
+        # simulated (deterministic) epoch profile: the CI perf-trajectory gate
+        record_metric("table3", f"{b}_epoch1_s", e1, better="lower")
+        record_metric("table3", f"{b}_steady_s", st, better="lower")
     (res, su, e1, st), us = timed(lambda: epoch_profile("nvme", physical_copy=True))
     profs["nvme_physical"] = (su, e1, st)
     rows.append(Row("table3/profile_nvme_physical", us, f"copy={su:.0f}s"))
@@ -89,6 +91,7 @@ def table3_projection():
             vals.append(rem_t / project_total(su, e1, stdy, n))
         lines.append("  " + f"{b:14s}" + "".join(f"{v:11.2f}x" for v in vals))
         rows.append(Row(f"table3/{b}", 0.0, ";".join(f"{n}ep={v:.2f}x" for n, v in zip((2, 30, 60, 90), vals))))
+        record_metric("table3", f"{b}_speedup_90ep", vals[-1], better="higher")
         if b in paper:
             lines.append("  " + f"{'(paper)':14s}" + "".join(f"{v:11.2f}x" for v in paper[b]))
     return rows, lines
@@ -170,6 +173,7 @@ def table5_uplink():
         (u, us) = timed(lambda f=frac: engine.uplink_usage(24, f, per_job_bw=2.67 * Gb))
         rows.append(Row(f"table5/misplaced{int(frac*100)}", us, f"uplink={u*100:.0f}%"))
         lines.append(f"  {int(frac*100):3d}% misplaced -> {u*100:4.0f}% up-link")
+        record_metric("table5", f"uplink_frac_misplaced{int(frac*100)}", u, better="lower")
     lines.append("  (paper: 5/9/13/17%)")
     return rows, lines
 
@@ -202,7 +206,7 @@ def misplaced_job_scenario():
     # 10x accelerator + storage-stack rates, 10GbE-class TOR up-link: the
     # cross-rack jobs now bind on the up-link.
     from dataclasses import replace as _rp
-    from repro.core import PAPER, WorkloadCalibration
+    from repro.core import PAPER
     fast = _rp(PAPER, gpu_bw=PAPER.gpu_bw * 10, stripe_rpc_bw=PAPER.stripe_rpc_bw * 10,
                stripe_move_bw=PAPER.stripe_move_bw * 10, fill_bw=PAPER.fill_bw * 10)
     slim = TopologyConfig(nodes_per_rack=4, racks_per_pod=2, tor_uplink_bw=10 * Gb)
@@ -216,7 +220,7 @@ def misplaced_job_scenario():
     f_remote, us4 = timed(lambda: run_fast([4, 5, 6, 7]))
     rows.append(Row("coplacement/fast_same_rack", us3, f"steady={f_local:.0f}s"))
     rows.append(Row("coplacement/fast_cross_rack", us4, f"steady={f_remote:.0f}s"))
-    lines.append(f"  10x accelerators, 10 Gb TOR up-link:")
+    lines.append("  10x accelerators, 10 Gb TOR up-link:")
     lines.append(f"    same-rack  {f_local:7.1f} s   cross-rack {f_remote:7.1f} s "
                  f"(+{(f_remote/f_local-1)*100:.0f}% — placement now binds)")
     return rows, lines

@@ -1,26 +1,96 @@
 """Benchmark harness: one function per paper table/figure.
 
-Prints ``name,us_per_call,derived`` CSV followed by formatted tables.
-Run: ``PYTHONPATH=src python -m benchmarks.run [--quick]``
+Prints ``name,us_per_call,derived`` CSV followed by formatted tables, and
+writes one machine-readable ``BENCH_<name>.json`` per executed benchmark
+(deterministic simulated metrics only — epoch seconds, remote bytes, hit
+rates; see :func:`benchmarks.common.record_metric`).  Executed benchmarks
+are gated against the committed ``benchmarks/baseline.json``: a metric more
+than 10% worse than baseline — or a baseline metric that disappeared — fails
+the run, which is how CI keeps the perf trajectory monotone.
+
+Run: ``PYTHONPATH=src python -m benchmarks.run [--quick] [--only a,b]``
+Refresh the baseline after an intentional perf change:
+``PYTHONPATH=src python -m benchmarks.run --quick --write-baseline``
 """
 
 from __future__ import annotations
 
 import argparse
+import json
+import os
 import sys
+
+#: relative regression tolerance against baseline.json (10%)
+TOLERANCE = 0.10
+
+BASELINE_PATH = os.path.join(os.path.dirname(__file__), "baseline.json")
+
+
+def check_against_baseline(
+    baseline: dict, metrics: dict, executed: set[str], tolerance: float = TOLERANCE
+) -> list[str]:
+    """Compare executed benchmarks' metrics to baseline; return problems.
+
+    Only benchmarks that actually ran are gated (``--only fsbench`` must not
+    fail on the absent rebalance metrics).  Both drifts are failures: a
+    metric regressing beyond ``tolerance`` in its declared worse-direction,
+    and a baseline metric the benchmark no longer emits (perf-coverage rot).
+    """
+    problems: list[str] = []
+    for bench, base_metrics in baseline.items():
+        if bench not in executed:
+            continue
+        got = metrics.get(bench, {})
+        for name, spec in base_metrics.items():
+            base = float(spec["value"])
+            better = spec.get("better", "lower")
+            if name not in got:
+                problems.append(
+                    f"{bench}/{name}: baseline metric no longer emitted "
+                    f"(baseline {base:g})"
+                )
+                continue
+            val = float(got[name]["value"])
+            if better == "lower":
+                limit = base * (1 + tolerance) + 1e-12
+                if val > limit:
+                    problems.append(
+                        f"{bench}/{name}: {val:g} > {base:g} (+{tolerance:.0%} allowed)"
+                    )
+            else:
+                limit = base * (1 - tolerance) - 1e-12
+                if val < limit:
+                    problems.append(
+                        f"{bench}/{name}: {val:g} < {base:g} (-{tolerance:.0%} allowed)"
+                    )
+    return problems
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true", help="skip the slowest sweeps")
     ap.add_argument("--only", default=None, help="comma-separated benchmark names")
+    ap.add_argument(
+        "--out", default="bench-artifacts",
+        help="directory for the BENCH_<name>.json artifacts",
+    )
+    ap.add_argument(
+        "--baseline", default=BASELINE_PATH,
+        help="baseline.json to gate metrics against",
+    )
+    ap.add_argument(
+        "--write-baseline", action="store_true",
+        help="merge this run's metrics into the baseline instead of gating",
+    )
     args = ap.parse_args()
 
     from . import paper_tables
     from .coldstart import coldstart_rows
+    from .common import collected_metrics
     from .fsbench import fsbench_rows
     from .ingest_demand import ingest_rows
     from .multitenant import multitenant_rows
+    from .rebalance import rebalance_rows
     from .roofline_table import roofline_rows
 
     benches = [
@@ -37,26 +107,62 @@ def main() -> None:
         ("roofline", roofline_rows),
         ("ingest", ingest_rows),
         ("fsbench", fsbench_rows),
+        ("rebalance", rebalance_rows),
     ]
     if args.quick:
         benches = [
             b for b in benches
-            if b[0] in ("table3", "table5", "roofline", "ingest", "fsbench")
+            if b[0] in ("table3", "table5", "roofline", "ingest", "fsbench", "rebalance")
         ]
     if args.only:
         keep = set(args.only.split(","))
         benches = [b for b in benches if b[0] in keep]
 
     all_rows, all_lines, failed = [], [], []
+    executed: set[str] = set()
     for name, fn in benches:
         try:
             rows, lines = fn()
+            executed.add(name)
             all_rows.extend(rows)
             all_lines.extend(lines + [""])
         except Exception as err:  # keep the harness running; report at end
             failed.append(name)
             all_lines.append(f"[{name}] FAILED: {err}")
             print(f"[{name}] FAILED: {err}", file=sys.stderr)
+
+    # ---- machine-readable artifacts: one BENCH_<name>.json per benchmark
+    metrics = collected_metrics()
+    os.makedirs(args.out, exist_ok=True)
+    for name in sorted(executed):
+        path = os.path.join(args.out, f"BENCH_{name}.json")
+        with open(path, "w") as fh:
+            json.dump({"benchmark": name, "metrics": metrics.get(name, {})}, fh, indent=2)
+            fh.write("\n")
+
+    # ---- perf-trajectory gate vs the committed baseline
+    if args.write_baseline:
+        baseline = {}
+        if os.path.exists(args.baseline):
+            with open(args.baseline) as fh:
+                baseline = json.load(fh)
+        for bench in executed:
+            if metrics.get(bench):
+                baseline[bench] = metrics[bench]
+        with open(args.baseline, "w") as fh:
+            json.dump(baseline, fh, indent=2, sort_keys=True)
+            fh.write("\n")
+        all_lines.append(f"baseline updated: {args.baseline}")
+    elif os.path.exists(args.baseline):
+        with open(args.baseline) as fh:
+            baseline = json.load(fh)
+        problems = check_against_baseline(baseline, metrics, executed)
+        for p in problems:
+            print(f"[baseline] REGRESSION: {p}", file=sys.stderr)
+        if problems:
+            failed.append("baseline-gate")
+    else:
+        print(f"[baseline] no {args.baseline}; gate skipped", file=sys.stderr)
 
     print("name,us_per_call,derived")
     for row in all_rows:

@@ -107,7 +107,9 @@ def given(**strategies: _Strategy):
 
         for attr in ("__name__", "__qualname__", "__doc__", "__module__"):
             setattr(wrapper, attr, getattr(fn, attr))
-        wrapper._fallback_max_examples = getattr(fn, "_fallback_max_examples", None) or _DEFAULT_MAX_EXAMPLES
+        wrapper._fallback_max_examples = (
+            getattr(fn, "_fallback_max_examples", None) or _DEFAULT_MAX_EXAMPLES
+        )
         return wrapper
 
     return deco

@@ -8,7 +8,7 @@ One ``ModelConfig`` covers the whole assigned pool: dense GQA decoders, MoE
 
 from __future__ import annotations
 
-from dataclasses import dataclass, field, replace
+from dataclasses import dataclass, replace
 from typing import Optional
 
 
@@ -137,7 +137,10 @@ class ModelConfig:
                 ),
             )
         if cfg.mla:
-            cfg = replace(cfg, mla=MLAConfig(kv_lora_rank=32, qk_nope_dim=32, qk_rope_dim=16, v_head_dim=32))
+            cfg = replace(
+                cfg,
+                mla=MLAConfig(kv_lora_rank=32, qk_nope_dim=32, qk_rope_dim=16, v_head_dim=32),
+            )
         if cfg.ssm:
             cfg = replace(cfg, ssm=replace(cfg.ssm, chunk=32, slstm_every=4))
         if cfg.encdec:
@@ -187,5 +190,8 @@ def shape_applicable(cfg: ModelConfig, shape: ShapeConfig) -> tuple[bool, str]:
             or (cfg.sliding_window > 0 and cfg.family in ("moe", "dense"))
         )
         if not sub_quadratic:
-            return False, "pure full-attention arch: 512k-token decode reserved for SSM/hybrid/windowed"
+            return (
+                False,
+                "pure full-attention arch: 512k-token decode reserved for SSM/hybrid/windowed",
+            )
     return True, ""

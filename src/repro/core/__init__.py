@@ -7,6 +7,7 @@ Public API surface (see DESIGN.md for the paper mapping):
 * ``StripeStore``                          — chunked, striped, replicated store
 * ``CacheManager`` / ``DatasetSpec``       — dataset-granularity lifecycle
 * ``PlacementEngine`` / ``JobSpec``        — data/compute co-scheduling
+* ``Rebalancer`` / ``MembershipEpoch``     — elastic membership + online re-striping
 * ``HoardLoader`` + backends               — transparent iterators (R4)
 * ``run_scenario`` / ``build_cluster``     — one-call experiment harness
 """
@@ -34,6 +35,13 @@ from .loader import (
 from .metrics import ClusterMetrics, JobMetrics
 from .placement import JobSpec, Placement, PlacementEngine
 from .prefetch import FillTracker, PrefetchScheduler
+from .rebalance import (
+    ChunkMove,
+    MembershipEpoch,
+    RebalanceError,
+    RebalancePlan,
+    Rebalancer,
+)
 from .simclock import AllOf, Event, Resource, SimClock
 from .stripestore import (
     MANIFEST_SCHEMA_VERSION,
@@ -54,13 +62,15 @@ from .workload import (
 
 __all__ = [
     "AllOf", "CacheEntry", "CacheEvent", "CacheFullError", "CacheManager",
-    "CacheState", "ChunkCorruption", "ClusterMetrics", "ClusterScheduler",
-    "DatasetSpec", "Event", "EvictionPolicy", "FillTracker", "HoardBackend",
-    "HoardLoader", "JobMetrics", "JobRecord", "JobResult", "JobSpec", "LRUCache",
-    "LRUStackModel", "LocalCopyBackend", "MANIFEST_SCHEMA_VERSION", "Node",
-    "PAPER", "PagePool", "Placement", "PlacementEngine", "PrefetchScheduler",
-    "RemoteBackend", "Resource", "ScenarioResult", "SimClock", "StripeDataPlane",
-    "StripeError", "StripeManifest", "StripeStore", "Topology", "TopologyConfig",
-    "TrainingJob", "WorkloadCalibration", "WorkloadJob", "WorkloadResult",
-    "buffer_cache_items", "build_cluster", "run_scenario", "stable_seed",
+    "CacheState", "ChunkCorruption", "ChunkMove", "ClusterMetrics",
+    "ClusterScheduler", "DatasetSpec", "Event", "EvictionPolicy", "FillTracker",
+    "HoardBackend", "HoardLoader", "JobMetrics", "JobRecord", "JobResult",
+    "JobSpec", "LRUCache", "LRUStackModel", "LocalCopyBackend",
+    "MANIFEST_SCHEMA_VERSION", "MembershipEpoch", "Node", "PAPER", "PagePool",
+    "Placement", "PlacementEngine", "PrefetchScheduler", "RebalanceError",
+    "RebalancePlan", "Rebalancer", "RemoteBackend", "Resource", "ScenarioResult",
+    "SimClock", "StripeDataPlane", "StripeError", "StripeManifest", "StripeStore",
+    "Topology", "TopologyConfig", "TrainingJob", "WorkloadCalibration",
+    "WorkloadJob", "WorkloadResult", "buffer_cache_items", "build_cluster",
+    "run_scenario", "stable_seed",
 ]

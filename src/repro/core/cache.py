@@ -114,6 +114,10 @@ class CacheManager:
         self.replication = int(replication)
         self.entries: dict[str, CacheEntry] = {}
         self._seq = itertools.count()
+        # attach point for the elastic rebalancer (repro.core.rebalance):
+        # placement and HoardFS.statfs consult it for the live membership
+        # view; None means the pre-elastic world (every node is a member)
+        self.rebalancer = None
         # lifecycle event log: every admit/readmit/filled/evict with sim time,
         # in order.  The workload engine and the churn benchmarks read this to
         # count evictions and re-admissions mid-simulation.
@@ -353,6 +357,11 @@ class CacheManager:
         engine's eviction guard) and live fill progress per dataset, so an
         operator — or :meth:`repro.fs.HoardFS.statfs` — can see a FILLING
         dataset converge and which datasets are eviction-immune right now.
+        ``migrating_chunks``/``membership_epoch`` expose the elastic
+        rebalancer's live state: chunks mid-flight count toward the node
+        capacity they are moving onto, so an operator sizing an admission
+        must see them here rather than discovering the reservation by
+        hitting ``CacheFullError``.
         """
         return [
             {
@@ -365,6 +374,12 @@ class CacheManager:
                 "last_access": e.last_access,
                 "fill_progress": self.fill_progress(e.spec.dataset_id),
                 "admissions": e.admissions,
+                "migrating_chunks": self.store.migrating_chunks(e.spec.dataset_id),
+                "membership_epoch": (
+                    self.store.manifests[e.spec.dataset_id].membership_epoch
+                    if e.spec.dataset_id in self.store.manifests
+                    else None
+                ),
             }
             for e in self.entries.values()
         ]

@@ -24,10 +24,10 @@ from typing import Iterator, Optional
 import numpy as np
 
 from .cache import CacheManager, CacheState
-from .calibration import PAPER, WorkloadCalibration
+from .calibration import WorkloadCalibration
 from .metrics import JobMetrics
 from .simclock import Event, Resource, SimClock
-from .stripestore import StripeError, StripeStore
+from .stripestore import StripeError
 from .tiers import LRUStackModel, PagePool, buffer_cache_items
 from .topology import Node, Topology
 
@@ -72,11 +72,16 @@ class RemoteBackend(_Backend):
 
     name = "REM"
 
-    def __init__(self, clock, topology, node, cal, *, mdr: Optional[float] = None, metrics: Optional[JobMetrics] = None):
+    def __init__(
+        self, clock, topology, node, cal, *,
+        mdr: Optional[float] = None, metrics: Optional[JobMetrics] = None,
+    ):
         super().__init__(clock, topology, node, cal)
         self.stream = Resource(f"{node.name}.nfs_stream", cal.rem_miss_bw)
         mdr = cal.default_mdr if mdr is None else mdr
-        self.buffer_cache = LRUStackModel(cal.dataset_items, buffer_cache_items(mdr, cal.dataset_items))
+        self.buffer_cache = LRUStackModel(
+            cal.dataset_items, buffer_cache_items(mdr, cal.dataset_items)
+        )
         self.metrics = metrics
 
     def batch_io(self, item_ids, epoch, positions) -> Event:
@@ -114,7 +119,9 @@ class LocalCopyBackend(_Backend):
     ):
         super().__init__(clock, topology, node, cal)
         mdr = cal.default_mdr if mdr is None else mdr
-        self.buffer_cache = LRUStackModel(cal.dataset_items, buffer_cache_items(mdr, cal.dataset_items))
+        self.buffer_cache = LRUStackModel(
+            cal.dataset_items, buffer_cache_items(mdr, cal.dataset_items)
+        )
         self.physical_copy = physical_copy
         self.metrics = metrics
 

@@ -69,33 +69,48 @@ class PlacementEngine:
         self.inventory = GPUInventory(topology, gpus_per_node)
 
     # ------------------------------------------------------------ cache nodes
+    def _members(self) -> Optional[set]:
+        """Live cache-tier membership, or None when the tier is not elastic."""
+        rb = getattr(self.cache, "rebalancer", None)
+        return rb.members if rb is not None else None
+
     def choose_cache_nodes(
-        self, total_bytes: float, *, count: Optional[int] = None, near: Optional[Sequence[Node]] = None
+        self,
+        total_bytes: float,
+        *,
+        count: Optional[int] = None,
+        near: Optional[Sequence[Node]] = None,
     ) -> list[Node]:
         """Pick a cache-node subset with enough aggregate free capacity.
 
         Prefers nodes near ``near`` (a job's compute nodes), then nodes with
-        the least *pending fill ingest* (reserved-but-unfilled stripe bytes:
-        an on-demand fill in progress will stream those bytes across the
-        node's NIC and NVMe write queue, so stacking a second filling
-        dataset there serialises both fills), then emptiest nodes first so
-        stripes spread across the cluster's free capacity.
+        the least *ingest pressure* — pending fill bytes plus in-flight
+        migration bytes targeting the node (both stream across its NIC and
+        NVMe write queue, so stacking a new dataset there serialises with
+        that traffic) — then emptiest nodes first so stripes spread across
+        the cluster's free capacity.  With an elastic rebalancer attached,
+        only live membership-view nodes qualify.
         """
         need = float(total_bytes)
+        members = self._members()
         anchor_racks = {n.rack_id for n in near} if near else set()
         anchor_pods = {n.pod_id for n in near} if near else set()
 
         def key(n: Node):
             return (
                 0 if n.rack_id in anchor_racks else (1 if n.pod_id in anchor_pods else 2),
-                self.cache.store.pending_fill_bytes(n.node_id),
+                self.cache.store.pending_fill_bytes(n.node_id)
+                + self.cache.store.migration_in_bytes(n.node_id),
                 self.cache.store.bytes_on_node(n.node_id),
                 n.node_id,
             )
 
         picked: list[Node] = []
         free_total = 0.0
-        for n in sorted(self.topology.nodes, key=key):
+        candidates = [
+            n for n in self.topology.nodes if members is None or n.node_id in members
+        ]
+        for n in sorted(candidates, key=key):
             free = self.cache.capacity_per_node - self.cache.store.bytes_on_node(n.node_id)
             if free <= 0:
                 continue
@@ -140,12 +155,16 @@ class PlacementEngine:
 
         def score(n: Node):
             # locality first (node > rack > pod, Section 4.5); among equals,
-            # avoid nodes still ingesting an on-demand fill — their NIC and
-            # NVMe write queue are already carrying remote->stripe traffic
+            # avoid nodes still ingesting an on-demand fill or in-flight
+            # migration chunks — their NIC and NVMe write queue are already
+            # carrying remote->stripe or rebalance traffic
+            ingest = self.cache.store.pending_fill_bytes(
+                n.node_id
+            ) + self.cache.store.migration_in_bytes(n.node_id)
             if not cached_nodes:
-                return (3, 0, n.node_id)
+                return (3, ingest, n.node_id)
             d = min(self.topology.distance(n, c) for c in cached_nodes)
-            return (d, self.cache.store.pending_fill_bytes(n.node_id), n.node_id)
+            return (d, ingest, n.node_id)
 
         candidates = sorted(
             (n for n in self.topology.nodes if self.inventory.free[n.node_id] >= job.gpus_per_node),
@@ -192,13 +211,23 @@ class PlacementEngine:
         *,
         per_job_bw: float = 2.67 * Gb,
         coordination_overhead: float = 0.01,
+        migration_bw: Optional[float] = None,
     ) -> float:
         """Fraction of a rack's TOR up-link consumed by misplaced jobs.
 
         A misplaced job streams its full ingest demand across the up-link;
         rack-local jobs contribute only cache-coordination chatter (the paper
         measures it as negligible; we book 1% as the observed floor).
+
+        ``migration_bw`` is the cross-rack bandwidth an *online rebalance* is
+        drawing concurrently.  It defaults to the attached rebalancer's live
+        draw (its cap while transfers are in flight, zero otherwise), so
+        admission decisions made mid-rebalance budget for the redistribution
+        traffic instead of oversubscribing the up-link.
         """
         uplink = self.topology.cfg.tor_uplink_bw
+        if migration_bw is None:
+            rb = getattr(self.cache, "rebalancer", None)
+            migration_bw = rb.active_migration_bw() if rb is not None else 0.0
         misplaced_jobs = n_jobs * misplaced_fraction
-        return coordination_overhead + (misplaced_jobs * per_job_bw) / uplink
+        return coordination_overhead + (misplaced_jobs * per_job_bw + migration_bw) / uplink

@@ -132,6 +132,16 @@ class FillTracker:
 
     def _start_fill(self, chunk: int) -> Event:
         man = self._manifest()
+        if self.store.is_migrating(self.dataset_id, chunk):
+            # invariant, not a race to tolerate: only *filled* chunks ever
+            # migrate as flows (unfilled moves are instant metadata
+            # retargets), and filled chunks are never demanded — so a fill
+            # starting on a mid-move chunk means the fill/rebalance planes
+            # disagree about fill state.  Fail loudly.
+            raise RuntimeError(
+                f"{self.dataset_id}:{chunk} is mid-migration but was demanded "
+                f"for fill (fill plane and rebalancer out of sync)"
+            )
         replicas = man.chunk_nodes[chunk]
         primary = self.topology.node(replicas[0])
         head = [self.ingest] if self.ingest else []

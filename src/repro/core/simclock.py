@@ -53,7 +53,9 @@ class Resource:
 class Flow:
     __slots__ = ("fid", "path", "size", "remaining", "rate", "event", "settled_at")
 
-    def __init__(self, fid: int, path: tuple[Resource, ...], nbytes: float, event: "Event", now: float):
+    def __init__(
+        self, fid: int, path: tuple[Resource, ...], nbytes: float, event: "Event", now: float
+    ):
         self.fid = fid
         self.path = path
         self.size = float(nbytes)

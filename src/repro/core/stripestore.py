@@ -38,8 +38,11 @@ class StripeError(RuntimeError):
 # On-disk manifest schema.  v1 (implicit, pre-versioning) blobs carry no
 # ``schema_version`` key and may omit ``chunk_filled`` entirely — an empty
 # fill mask means "fully filled at create time" (see ``is_filled``).  v2 adds
-# the explicit version field so HoardFS metadata can evolve safely.
-MANIFEST_SCHEMA_VERSION = 2
+# the explicit version field so HoardFS metadata can evolve safely.  v3 adds
+# ``membership_epoch``, the monotonic cluster-view generation stamped by the
+# elastic rebalancer (:mod:`repro.core.rebalance`); v1/v2 blobs load as
+# epoch 0 (the pre-elastic world had exactly one membership view).
+MANIFEST_SCHEMA_VERSION = 3
 
 
 class ChunkCorruption(StripeError):
@@ -60,6 +63,10 @@ class StripeManifest:
     # per-chunk fill state for the on-demand (first-epoch) fill path; empty
     # list (old manifests) means fully filled at create time
     chunk_filled: list[bool] = field(default_factory=list)
+    # cluster-view generation (schema v3): bumped by the rebalancer whenever
+    # this dataset's membership changes (add/remove/fail); readers use it to
+    # detect that placements moved under them
+    membership_epoch: int = 0
 
     def is_filled(self, chunk: int) -> bool:
         return not self.chunk_filled or self.chunk_filled[chunk]
@@ -99,6 +106,10 @@ class StripeManifest:
             # legacy layout: the fill plane did not exist, so any missing
             # fill mask means "fully filled at create time"
             d.setdefault("chunk_filled", [])
+        if version < 3:
+            # pre-elastic manifests were written under the one-and-only
+            # membership view; epoch 0 by definition
+            d.setdefault("membership_epoch", 0)
         return cls(**d)
 
 
@@ -119,6 +130,15 @@ class StripeStore:
         # manifests' chunk_filled state; placement reads this per candidate
         # node, so it must stay O(1))
         self._pending_fill: dict[int, int] = {n.node_id: 0 for n in topology.nodes}
+        # in-flight chunk transfers (elastic rebalancing, repro.core.rebalance):
+        # (dataset, chunk) -> (src or None, dst, kind).  The destination's
+        # capacity is reserved at begin_transfer so admission control cannot
+        # oversubscribe a node mid-rebalance; the manifest itself only changes
+        # at commit_transfer (dual-epoch reads: old placement serves until the
+        # move commits).
+        self._migrating: dict[tuple[str, int], tuple[Optional[int], int, str]] = {}
+        self._migration_in: dict[int, int] = {n.node_id: 0 for n in topology.nodes}
+        self._migration_out: dict[int, int] = {n.node_id: 0 for n in topology.nodes}
 
     # ----------------------------------------------------------------- create
     def create(
@@ -204,7 +224,9 @@ class StripeStore:
         filling transition) and, in materialized mode, writes the real bytes
         + CRC to every replica.  Called by the fill data plane
         (:class:`repro.core.prefetch.FillTracker`) when a remote->stripe
-        transfer completes, never directly by readers.
+        transfer completes, never directly by readers.  Replicas are
+        resolved *now*, not at demand time, so a fill that raced an elastic
+        metadata retarget lands at the chunk's post-move placement.
         """
         man = self.manifests[dataset_id]
         if man.is_filled(chunk):
@@ -249,6 +271,194 @@ class StripeStore:
         fail_node/delete, never a manifest scan.
         """
         return self._pending_fill[node_id]
+
+    # -------------------------------------------------------- elastic moves
+    # The rebalancer's two-phase chunk-transfer protocol.  ``begin_transfer``
+    # reserves the destination (capacity + migration counters) while the
+    # bytes cross the simulated fabric; ``commit_transfer`` is the *only*
+    # point at which the manifest placement changes, so every read issued
+    # mid-move resolves against the old placement (the source replica keeps
+    # serving) and every read after the commit resolves against the new one —
+    # the dual-epoch lookup the elastic tier needs with zero read-path cost.
+
+    TRANSFER_KINDS = ("move", "repair", "refetch")
+
+    def is_migrating(self, dataset_id: str, chunk: int) -> bool:
+        return (dataset_id, chunk) in self._migrating
+
+    def migrating_chunks(self, dataset_id: str) -> int:
+        """In-flight transfer count for one dataset (CacheManager.ls)."""
+        return sum(1 for ds, _c in self._migrating if ds == dataset_id)
+
+    def migration_in_bytes(self, node_id: int) -> int:
+        """Bytes of in-flight migration traffic *targeting* a node.
+
+        Reserved at ``begin_transfer`` time: the destination's NVMe write
+        queue and NIC will carry these bytes, and its capacity is already
+        charged (``node_usage``), so placement scoring and admission control
+        see a mid-rebalance node as busy/full rather than free.  O(1).
+        """
+        return self._migration_in[node_id]
+
+    def migration_out_bytes(self, node_id: int) -> int:
+        """Bytes of in-flight migration traffic *sourced from* a node."""
+        return self._migration_out[node_id]
+
+    def begin_transfer(
+        self, dataset_id: str, chunk: int, src: Optional[int], dst: int, kind: str = "move"
+    ) -> bool:
+        """Reserve ``dst`` for an in-flight chunk transfer; False = invalid.
+
+        ``kind``: ``"move"`` replaces the ``src`` replica with ``dst`` at
+        commit, ``"repair"`` adds ``dst`` as a new replica (copy from the
+        surviving ``src``), ``"refetch"`` re-fetches a wholly-lost chunk from
+        the remote store into ``dst`` (``src`` is None).  Only *filled*
+        chunks move as flows — unfilled chunks are pure metadata and use
+        :meth:`retarget_replica` / :meth:`assign_replica` instead.
+        """
+        if kind not in self.TRANSFER_KINDS:
+            raise StripeError(f"unknown transfer kind {kind!r}")
+        man = self.manifests.get(dataset_id)
+        key = (dataset_id, chunk)
+        if man is None or key in self._migrating:
+            return False
+        replicas = man.chunk_nodes[chunk]
+        if kind == "refetch":
+            # refetch is for *lost* chunks only: data existed (filled) and
+            # every replica is gone; an unfilled lost chunk is re-granted via
+            # assign_replica and re-fetched by the fill plane instead
+            if replicas or src is not None or not man.is_filled(chunk):
+                return False
+        else:
+            if src not in replicas or dst in replicas:
+                return False
+            if not man.is_filled(chunk):
+                return False                     # unfilled = metadata-only ops
+        self._migrating[key] = (src, dst, kind)
+        self.node_usage[dst] += man.chunk_bytes
+        self._migration_in[dst] += man.chunk_bytes
+        if src is not None:
+            self._migration_out[src] += man.chunk_bytes
+        return True
+
+    def commit_transfer(self, dataset_id: str, chunk: int) -> bool:
+        """Land an in-flight transfer: the manifest flips to the new placement.
+
+        Returns False when the transfer was aborted under us (node failure,
+        dataset eviction, a concurrent maintenance op invalidating the move)
+        — the caller simply drops the completion on the floor.
+        """
+        key = (dataset_id, chunk)
+        entry = self._migrating.get(key)
+        if entry is None:
+            return False
+        src, dst, kind = entry
+        man = self.manifests[dataset_id]
+        replicas = man.chunk_nodes[chunk]
+        # re-validate against concurrent maintenance (drain/repair/fail ran
+        # while the bytes were in flight): abort instead of corrupting
+        if dst in replicas or (kind != "refetch" and src not in replicas):
+            self.abort_transfer(dataset_id, chunk)
+            return False
+        del self._migrating[key]
+        cb = man.chunk_bytes
+        self._migration_in[dst] -= cb
+        if src is not None:
+            self._migration_out[src] -= cb
+        self._replica0.pop(dataset_id, None)
+        if kind == "refetch":
+            replicas.append(dst)
+            if man.chunk_filled:
+                man.chunk_filled[chunk] = True
+            if man.materialized:
+                blob = self._default_payload(man, chunk)
+                man.chunk_crc[chunk] = zlib.crc32(blob)
+                path = self._chunk_path(dataset_id, dst, chunk)
+                os.makedirs(os.path.dirname(path), exist_ok=True)
+                with open(path, "wb") as fh:
+                    fh.write(blob)
+            return True
+        if man.materialized and man.is_filled(chunk):
+            blob = self._read_chunk(man, src, chunk)
+            path = self._chunk_path(dataset_id, dst, chunk)
+            os.makedirs(os.path.dirname(path), exist_ok=True)
+            with open(path, "wb") as fh:
+                fh.write(blob)
+        if kind == "move":
+            replicas[replicas.index(src)] = dst
+            self.node_usage[src] -= cb
+            if man.materialized:
+                old = self._chunk_path(dataset_id, src, chunk)
+                if os.path.exists(old):
+                    os.remove(old)
+        else:                                    # repair: dst joins the set
+            replicas.append(dst)
+        return True
+
+    def abort_transfer(self, dataset_id: str, chunk: int) -> bool:
+        """Release an in-flight transfer's destination reservation."""
+        entry = self._migrating.pop((dataset_id, chunk), None)
+        if entry is None:
+            return False
+        src, dst, _kind = entry
+        man = self.manifests[dataset_id]
+        self.node_usage[dst] -= man.chunk_bytes
+        self._migration_in[dst] -= man.chunk_bytes
+        if src is not None:
+            self._migration_out[src] -= man.chunk_bytes
+        return True
+
+    def _abort_transfers_touching(self, node_id: int) -> None:
+        """Abort every in-flight transfer whose src or dst just failed."""
+        doomed = [
+            (ds, c)
+            for (ds, c), (src, dst, _k) in self._migrating.items()
+            if src == node_id or dst == node_id
+        ]
+        for ds, c in doomed:
+            self.abort_transfer(ds, c)
+
+    def retarget_replica(self, dataset_id: str, chunk: int, src: int, dst: int) -> None:
+        """Metadata-only move of an *unfilled* chunk replica (no bytes exist).
+
+        The eventual ``put_chunk`` writes every replica at its then-current
+        placement, so a fill started before the retarget still lands at the
+        post-move node — the prefetch plane needs no special casing.
+        """
+        man = self.manifests[dataset_id]
+        if man.is_filled(chunk):
+            raise StripeError(f"{dataset_id}:{chunk} is filled; move it as a flow")
+        replicas = man.chunk_nodes[chunk]
+        replicas[replicas.index(src)] = dst
+        self._replica0.pop(dataset_id, None)
+        self.node_usage[src] -= man.chunk_bytes
+        self.node_usage[dst] += man.chunk_bytes
+        self._pending_fill[src] -= man.chunk_bytes
+        self._pending_fill[dst] += man.chunk_bytes
+
+    def assign_replica(self, dataset_id: str, chunk: int, dst: int) -> None:
+        """Metadata-only replica grant for an *unfilled* chunk (repair path)."""
+        man = self.manifests[dataset_id]
+        if man.is_filled(chunk):
+            raise StripeError(f"{dataset_id}:{chunk} is filled; repair it as a flow")
+        replicas = man.chunk_nodes[chunk]
+        if dst in replicas:
+            raise StripeError(f"{dataset_id}:{chunk} already has a replica on {dst}")
+        replicas.append(dst)
+        self._replica0.pop(dataset_id, None)
+        self.node_usage[dst] += man.chunk_bytes
+        self._pending_fill[dst] += man.chunk_bytes
+
+    def update_membership(self, dataset_id: str, node_ids: Sequence[int], epoch: int) -> None:
+        """Stamp a new membership view into the manifest (schema v3)."""
+        man = self.manifests[dataset_id]
+        if epoch < man.membership_epoch:
+            raise StripeError(
+                f"{dataset_id}: membership epoch must be monotonic "
+                f"({epoch} < {man.membership_epoch})"
+            )
+        man.node_ids = list(node_ids)
+        man.membership_epoch = int(epoch)
 
     # ------------------------------------------------------------------ reads
     def _first_replica(self, dataset_id: str) -> np.ndarray:
@@ -356,6 +566,10 @@ class StripeStore:
     def fail_node(self, node_id: int) -> None:
         """Drop a node's chunks (simulated node loss)."""
         self._replica0.clear()                    # placements change below
+        # in-flight transfers sourced from or targeting the dead node can
+        # never complete; release their reservations so capacity accounting
+        # stays exact (the rebalancer re-plans from the post-failure state)
+        self._abort_transfers_touching(node_id)
         for man in self.manifests.values():
             for c, replicas in enumerate(man.chunk_nodes):
                 if node_id in replicas:
@@ -380,6 +594,8 @@ class StripeStore:
         created = 0
         for c, replicas in enumerate(man.chunk_nodes):
             while 0 < len(replicas) < want:
+                if self.is_migrating(dataset_id, c):
+                    break                         # the rebalancer owns this chunk
                 candidates = [nid for nid in man.node_ids if nid not in replicas]
                 if not candidates:
                     break
@@ -411,7 +627,7 @@ class StripeStore:
         self._replica0.pop(dataset_id, None)      # placements change below
         moved = 0
         for c, replicas in enumerate(man.chunk_nodes):
-            if node_id not in replicas:
+            if node_id not in replicas or self.is_migrating(dataset_id, c):
                 continue
             candidates = [n for n in man.node_ids if n not in replicas]
             if not candidates:
@@ -438,6 +654,10 @@ class StripeStore:
 
     # ----------------------------------------------------------------- delete
     def delete(self, dataset_id: str) -> None:
+        # abort in-flight transfers first (while the manifest still exists,
+        # so abort_transfer can release the dst reservations it charged)
+        for ds, c in [k for k in self._migrating if k[0] == dataset_id]:
+            self.abort_transfer(ds, c)
         man = self.manifests.pop(dataset_id, None)
         self._replica0.pop(dataset_id, None)
         if man is None:

@@ -85,7 +85,9 @@ class LRUStackModel:
         self._last_epoch[item_ids] = epoch
         self._last_pos[item_ids] = self.n - 1
 
-    def access_epoch_batch(self, item_ids: np.ndarray, epoch: int, positions: np.ndarray) -> np.ndarray:
+    def access_epoch_batch(
+        self, item_ids: np.ndarray, epoch: int, positions: np.ndarray
+    ) -> np.ndarray:
         gap = epoch - self._last_epoch[item_ids]
         lp = self._last_pos[item_ids].astype(np.float64)
         p = positions.astype(np.float64)

@@ -14,8 +14,6 @@ because the placement engine (Requirement 3) optimises exactly this distance.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Optional
-
 from .simclock import Resource, SimClock
 
 GB = 1e9

@@ -194,6 +194,11 @@ class ClusterScheduler:
         self._wake: Optional[Event] = None
         # one POSIX namespace per cluster, shared by every "posix" job's mount
         self._meta = None
+        # elastic membership (repro.core.rebalance): created lazily by
+        # scale_event / the rebalancer property; None until the first use so
+        # fixed-membership scenarios stay byte-identical to the pre-elastic
+        # engine (an attached rebalancer changes placement scoring inputs)
+        self._rebalancer = None
 
     def _metadata(self):
         if self._meta is None:
@@ -201,6 +206,58 @@ class ClusterScheduler:
 
             self._meta = MetadataService(self.store)
         return self._meta
+
+    # --------------------------------------------------- elastic membership
+    @property
+    def rebalancer(self):
+        """The cluster's elastic-membership controller (created on demand)."""
+        if self._rebalancer is None:
+            from .rebalance import Rebalancer      # local: avoid import cycle
+
+            self._rebalancer = Rebalancer(self.clock, self.topology, self.cache)
+        return self._rebalancer
+
+    def configure_rebalancer(self, **kw):
+        """Create the rebalancer with explicit knobs (bw cap, membership)."""
+        from .rebalance import Rebalancer
+
+        if self._rebalancer is not None:
+            raise RuntimeError("rebalancer already created")
+        self._rebalancer = Rebalancer(self.clock, self.topology, self.cache, **kw)
+        return self._rebalancer
+
+    def scale_event(
+        self,
+        at: float,
+        *,
+        add: Sequence[int] = (),
+        remove: Sequence[int] = (),
+        fail: Sequence[int] = (),
+    ) -> Event:
+        """Schedule a cache-tier membership change at sim time ``at``.
+
+        ``add``/``remove``/``fail`` are node ids; at ``at`` the rebalancer
+        applies them in that order, each kicking off background re-striping
+        that contends with (and is throttled against) whatever jobs are
+        running.  Returns an event fired when every triggered rebalance has
+        committed — the workload-engine surface for scale-out/scale-in
+        scenarios (``benchmarks/rebalance.py``, ``examples/elastic_cache.py``).
+        """
+        rb = self.rebalancer
+        done = self.clock.event()
+
+        def fire():
+            events = []
+            for nid in add:
+                events.append(rb.add_node(nid))
+            for nid in remove:
+                events.append(rb.remove_node(nid))
+            for nid in fail:
+                events.append(rb.fail_node(nid))
+            self.clock.all_of(events).on_fire(done.set)
+
+        self.clock.schedule(max(0.0, at - self.clock.now), fire)
+        return done
 
     # ----------------------------------------------------------- wake-up bus
     def _turnstile(self) -> Event:
@@ -241,7 +298,9 @@ class ClusterScheduler:
         self.clock.process(self._job_proc(spec, rec))
         return rec
 
-    def run(self, jobs: Optional[Sequence[WorkloadJob]] = None, *, strict: bool = True) -> WorkloadResult:
+    def run(
+        self, jobs: Optional[Sequence[WorkloadJob]] = None, *, strict: bool = True
+    ) -> WorkloadResult:
         """Submit ``jobs``, drain the simulation, return per-job records."""
         for spec in jobs or ():
             self.submit(spec)

@@ -11,13 +11,12 @@ checkpoint manager persists for deterministic restart.
 
 from __future__ import annotations
 
-import os
 from dataclasses import dataclass
 from typing import Iterator, Optional
 
 import numpy as np
 
-from ..core import CacheManager, DatasetSpec, Node, StripeStore, Topology
+from ..core import CacheManager, DatasetSpec, Node, StripeStore
 from ..train.checkpoint import SamplerState
 
 

@@ -61,6 +61,10 @@ class FileAttr:
     item_lo: int = 0               # first dataset item this shard covers
     n_items: int = 0               # items in this shard (files) / dataset (ds dir)
     item_bytes: int = 0
+    # cluster-view generation the placement behind this attr belongs to
+    # (StripeManifest.membership_epoch, schema v3); a consumer holding two
+    # attrs with different epochs knows the stripes re-balanced in between
+    membership_epoch: int = 0
 
     @property
     def is_dir(self) -> bool:
@@ -132,6 +136,7 @@ class MetadataService:
                 path=f"{ROOT}/{dataset_id}", kind="dir", size=0,
                 dataset_id=dataset_id, n_items=man.n_items,
                 item_bytes=man.item_bytes,
+                membership_epoch=man.membership_epoch,
             )
         if len(parts) > 3:
             raise _enoent(path)
@@ -149,6 +154,7 @@ class MetadataService:
             size=n_items * man.item_bytes, dataset_id=dataset_id,
             file_index=index, item_lo=item_lo, n_items=n_items,
             item_bytes=man.item_bytes,
+            membership_epoch=man.membership_epoch,
         )
 
     # POSIX spelling: stat is lookup that follows no links (we have none)

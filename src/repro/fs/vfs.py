@@ -276,7 +276,9 @@ class HoardFS:
         res = ReadResult(event=ev, nbytes=nbytes)
         if self._materialized(attr):
             # the payload exists only once the fills land; bind it at fire time
-            ev.on_fire(lambda _v, r=res: setattr(r, "data", self._read_bytes(attr, offset, r.nbytes)))
+            ev.on_fire(
+                lambda _v, r=res: setattr(r, "data", self._read_bytes(attr, offset, r.nbytes))
+            )
         return res
 
     def pread_batch(
@@ -323,15 +325,24 @@ class HoardFS:
     def statfs(self) -> dict:
         """Filesystem-wide view: capacity + per-dataset cache state.
 
-        Capacity figures aggregate over *every* node (any node can hold
-        stripes); a specific admission is still bounded by the free bytes of
-        its target subset, so ``free_bytes > 0`` does not promise the next
-        ``admit`` fits — check per-dataset ``nodes`` for locality.  The
-        dataset table is :meth:`CacheManager.ls` verbatim — reader-pin
-        counts (``active_readers``) and live ``fill_progress`` included, so
-        ``statfs`` during an on-demand fill shows the cache converging.
+        Capacity figures aggregate over the *live membership view* — with an
+        elastic rebalancer attached, only member nodes can hold stripes, so
+        a node mid-removal stops being counted the instant the epoch bumps
+        (its data is still draining, which ``used_bytes`` reflects).  Without
+        a rebalancer every node is a member, the pre-elastic behaviour.  A
+        specific admission is still bounded by the free bytes of its target
+        subset, so ``free_bytes > 0`` does not promise the next ``admit``
+        fits — check per-dataset ``nodes`` for locality.  The dataset table
+        is :meth:`CacheManager.ls` verbatim — reader pins, live
+        ``fill_progress`` and per-dataset ``migrating_chunks``/
+        ``membership_epoch`` included, so ``statfs`` during a fill or a
+        rebalance shows the cache converging.
         """
-        nodes = self.topology.nodes
+        rb = getattr(self.cache, "rebalancer", None)
+        if rb is not None:
+            nodes = [n for n in self.topology.nodes if n.node_id in rb.members]
+        else:
+            nodes = self.topology.nodes
         capacity = self.cache.capacity_per_node * len(nodes)
         used = float(sum(self.cache.store.bytes_on_node(n.node_id) for n in nodes))
         return {
@@ -339,6 +350,11 @@ class HoardFS:
             "used_bytes": used,
             "free_bytes": capacity - used,
             "open_handles": len(self._handles),
+            "membership_epoch": rb.epoch.value if rb is not None else 0,
+            "members": sorted(rb.members) if rb is not None else [n.node_id for n in nodes],
+            "migrating_chunks": sum(
+                self.cache.store.migrating_chunks(ds) for ds in self.cache.store.manifests
+            ),
             "datasets": self.cache.ls(),
         }
 

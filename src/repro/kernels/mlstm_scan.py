@@ -12,7 +12,6 @@ paper's ecosystem with a TPU-native chunkwise layout.
 from __future__ import annotations
 
 import functools
-import math
 
 import jax
 import jax.numpy as jnp

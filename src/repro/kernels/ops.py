@@ -8,7 +8,6 @@ XLA fallbacks live in ``repro.models.layers`` / ``repro.kernels.ref``.
 
 from __future__ import annotations
 
-from functools import partial
 
 import jax
 

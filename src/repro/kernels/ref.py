@@ -64,7 +64,9 @@ def mlstm_ref(q, k, v, i_raw, log_f):
         m_new = jnp.maximum(f_t + m, i_t)
         f_s = jnp.exp(f_t + m - m_new)
         i_s = jnp.exp(i_t - m_new)
-        C = f_s[..., None, None] * C + i_s[..., None, None] * (k_t[..., :, None] * v_t[..., None, :])
+        C = f_s[..., None, None] * C + i_s[..., None, None] * (
+            k_t[..., :, None] * v_t[..., None, :]
+        )
         n = f_s[..., None] * n + i_s[..., None] * k_t
         num = jnp.einsum("bhd,bhdv->bhv", q_t, C)
         den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", q_t, n)), jnp.exp(-m_new))

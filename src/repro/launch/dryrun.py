@@ -101,7 +101,10 @@ def _compile_cell(cfg, shape, mesh):
     return layout, compiled, t_lower, time.time() - t0
 
 
-def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False, overrides: dict = None, save: bool = True):
+def run_cell(
+    arch: str, shape_name: str, *,
+    multi_pod: bool = False, overrides: dict = None, save: bool = True,
+):
     from dataclasses import replace
 
     cfg = ARCHS[arch]

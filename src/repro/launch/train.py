@@ -26,7 +26,6 @@ import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from ..configs import ARCHS
 from ..core import build_cluster

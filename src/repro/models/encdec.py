@@ -9,8 +9,6 @@ caches: per-layer self KV + static cross KV computed once from the encoder.
 
 from __future__ import annotations
 
-from functools import partial
-from typing import Any
 
 import jax
 import jax.numpy as jnp

@@ -444,7 +444,9 @@ class Hymba:
         win = cfg.hybrid.sliding_window
         new_cache: dict[str, Any] = {}
         for i in range(self.n_global):
-            x, nc = self._decode_block(params[f"global_{i}"], x, cache[f"global_{i}"], index, window=0)
+            x, nc = self._decode_block(
+                params[f"global_{i}"], x, cache[f"global_{i}"], index, window=0
+            )
             new_cache[f"global_{i}"] = nc
             if i < len(self.swa_runs):
 

@@ -17,7 +17,6 @@ Two block-enumeration modes:
 from __future__ import annotations
 
 import math
-from functools import partial
 from typing import Optional
 
 import jax
@@ -77,7 +76,10 @@ def _block_mask(q_pos, kv_pos, *, causal: bool, window: int):
     return m
 
 
-def band_pairs(nq: int, nk: int, q_block: int, kv_block: int, *, causal: bool, window: int, q_offset_blocks: int = 0) -> np.ndarray:
+def band_pairs(
+    nq: int, nk: int, q_block: int, kv_block: int, *,
+    causal: bool, window: int, q_offset_blocks: int = 0,
+) -> np.ndarray:
     """Static (qi, kj) block pairs intersecting the causal/window band."""
     pairs = []
     for qi in range(nq):
@@ -154,7 +156,9 @@ def blockwise_attention(
         p = jnp.exp(s - m_new[..., None])
         corr = jnp.exp(m - m_new)
         l_new = l * corr + p.sum(-1)
-        pv = jnp.einsum("bhgqk,bhkd->bhgqd", p.astype(v.dtype), vj, preferred_element_type=jnp.float32)
+        pv = jnp.einsum(
+            "bhgqk,bhkd->bhgqd", p.astype(v.dtype), vj, preferred_element_type=jnp.float32
+        )
         acc_new = acc * corr[..., None] + pv
         return m_new, l_new, acc_new
 
@@ -226,7 +230,9 @@ def decode_attention(q, k_cache, v_cache, valid_len, *, window: int = 0):
         mask &= pos[None, :] > vl - 1 - window
     s = jnp.where(mask[:, None, None, None, :], s, _NEG_INF)
     p = jax.nn.softmax(s, axis=-1)
-    out = jnp.einsum("bhgqk,bhkd->bhgqd", p.astype(v_cache.dtype), v_cache, preferred_element_type=jnp.float32)
+    out = jnp.einsum(
+        "bhgqk,bhkd->bhgqd", p.astype(v_cache.dtype), v_cache, preferred_element_type=jnp.float32
+    )
     return out.reshape(B, Hq, 1, hdv).astype(v_cache.dtype)
 
 

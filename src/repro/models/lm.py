@@ -14,16 +14,15 @@ values are computed directly against the latent.
 from __future__ import annotations
 
 import math
-from dataclasses import dataclass
 from functools import partial
-from typing import Any, Optional
+from typing import Any
 
 import jax
 import jax.numpy as jnp
 from jax import lax
 from jax.sharding import PartitionSpec as P
 
-from ..configs.base import ModelConfig, ShapeConfig
+from ..configs.base import ModelConfig
 from . import params as PM
 from .layers import (
     blockwise_attention,
@@ -341,8 +340,12 @@ class DecoderLM:
         if cfg.mla is not None:
             m = cfg.mla
             per = {
-                "c_kv": PM.ParamInfo((batch, seq, m.kv_lora_rank), P(self._dp(), TP, None), "zeros"),
-                "k_rope": PM.ParamInfo((batch, seq, m.qk_rope_dim), P(self._dp(), TP, None), "zeros"),
+                "c_kv": PM.ParamInfo(
+                    (batch, seq, m.kv_lora_rank), P(self._dp(), TP, None), "zeros"
+                ),
+                "k_rope": PM.ParamInfo(
+                    (batch, seq, m.qk_rope_dim), P(self._dp(), TP, None), "zeros"
+                ),
             }
         else:
             per = {

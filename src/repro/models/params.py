@@ -15,8 +15,7 @@ axis to every leaf (sharding ``None`` on that axis).
 from __future__ import annotations
 
 from dataclasses import dataclass, replace
-from functools import partial
-from typing import Callable, Optional
+from typing import Optional
 
 import jax
 import jax.numpy as jnp

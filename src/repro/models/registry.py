@@ -8,8 +8,6 @@ single entry point the dry-run, launcher and benchmarks share.
 
 from __future__ import annotations
 
-from typing import Any, Optional
-
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P

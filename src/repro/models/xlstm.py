@@ -18,8 +18,6 @@ nonlinearity) and run as a ``lax.scan`` over time.
 
 from __future__ import annotations
 
-from functools import partial
-from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -234,7 +232,9 @@ class XLSTM:
         h = rms_norm(x, p["ln"], cfg.norm_eps)
         # input-driven gate preactivations; the recurrent term (depends on
         # h_{t-1}) is added inside the scan
-        gates = jnp.einsum("bsd,dhDg->bshDg", h.astype(jnp.float32), p["w_gates"].astype(jnp.float32)) + p["b_gates"].astype(jnp.float32)
+        gates = jnp.einsum(
+            "bsd,dhDg->bshDg", h.astype(jnp.float32), p["w_gates"].astype(jnp.float32)
+        ) + p["b_gates"].astype(jnp.float32)
         state = (
             jnp.zeros((B, self.sh, self.sdh), jnp.float32),
             jnp.zeros((B, self.sh, self.sdh), jnp.float32),
@@ -319,16 +319,26 @@ class XLSTM:
         # H (4 heads) does not divide a 16-way model axis; shard the large
         # per-head state dims on 'model' instead
         m_state = {
-            "C": PM.ParamInfo((batch, self.H, self.dqk, self.dv), P(dp, None, TP, None), "zeros", dtype="float32"),
+            "C": PM.ParamInfo(
+                (batch, self.H, self.dqk, self.dv), P(dp, None, TP, None), "zeros", dtype="float32"
+            ),
             "n": PM.ParamInfo((batch, self.H, self.dqk), P(dp, None, TP), "zeros", dtype="float32"),
             "m": PM.ParamInfo((batch, self.H), P(dp, None), "zeros", dtype="float32"),
             "conv": PM.ParamInfo((batch, W - 1, self.ed), P(dp, None, TP), "zeros"),
         }
         s_state = {
-            "c": PM.ParamInfo((batch, self.sh, self.sdh), P(dp, None, TP), "zeros", dtype="float32"),
-            "n": PM.ParamInfo((batch, self.sh, self.sdh), P(dp, None, TP), "zeros", dtype="float32"),
-            "m": PM.ParamInfo((batch, self.sh, self.sdh), P(dp, None, TP), "zeros", dtype="float32"),
-            "h": PM.ParamInfo((batch, self.sh, self.sdh), P(dp, None, TP), "zeros", dtype="float32"),
+            "c": PM.ParamInfo(
+                (batch, self.sh, self.sdh), P(dp, None, TP), "zeros", dtype="float32"
+            ),
+            "n": PM.ParamInfo(
+                (batch, self.sh, self.sdh), P(dp, None, TP), "zeros", dtype="float32"
+            ),
+            "m": PM.ParamInfo(
+                (batch, self.sh, self.sdh), P(dp, None, TP), "zeros", dtype="float32"
+            ),
+            "h": PM.ParamInfo(
+                (batch, self.sh, self.sdh), P(dp, None, TP), "zeros", dtype="float32"
+            ),
         }
         return {
             "groups": PM.stack(groups, {"mlstm": PM.stack(every - 1, m_state), "slstm": s_state})
@@ -359,7 +369,9 @@ class XLSTM:
 
         def s_decode(p, h, st):
             hx = rms_norm(h, p["ln"], cfg.norm_eps)[:, 0]
-            g = jnp.einsum("bd,dhDg->bhDg", hx.astype(jnp.float32), p["w_gates"].astype(jnp.float32))
+            g = jnp.einsum(
+                "bd,dhDg->bhDg", hx.astype(jnp.float32), p["w_gates"].astype(jnp.float32)
+            )
             g = g + p["b_gates"].astype(jnp.float32)
             g = g + jnp.einsum("bhd,hdDg->bhDg", st["h"], p["r_gates"].astype(jnp.float32))
             z = jnp.tanh(g[..., 0])

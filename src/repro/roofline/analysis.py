@@ -22,7 +22,6 @@ ICI (per the assignment).
 
 from __future__ import annotations
 
-import json
 import re
 from dataclasses import asdict, dataclass, field
 from typing import Optional
@@ -36,7 +35,9 @@ _DTYPE_BYTES = {
     "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
     "c128": 16,
 }
-_TYPE_RE = re.compile(r"(pred|bf16|f16|f32|f64|s8|u8|s16|u16|s32|u32|s64|u64|c64|c128)\[([0-9,]*)\]")
+_TYPE_RE = re.compile(
+    r"(pred|bf16|f16|f32|f64|s8|u8|s16|u16|s32|u32|s64|u64|c64|c128)\[([0-9,]*)\]"
+)
 _COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all", "collective-permute")
 
 
@@ -159,7 +160,9 @@ class RooflineReport:
 
     @property
     def bottleneck(self) -> str:
-        terms = {"compute": self.compute_s, "memory": self.memory_s, "collective": self.collective_s}
+        terms = {
+            "compute": self.compute_s, "memory": self.memory_s, "collective": self.collective_s
+        }
         return max(terms, key=terms.get)
 
     @property
@@ -193,7 +196,9 @@ class RooflineReport:
         return d
 
 
-def model_flops(cfg, shape, param_count: int, embed_params: int = 0, active_param_count: Optional[int] = None) -> float:
+def model_flops(
+    cfg, shape, param_count: int, embed_params: int = 0, active_param_count: Optional[int] = None
+) -> float:
     """6*N*D for training, 2*N*D for inference (N = non-embedding params)."""
     n = (active_param_count or param_count) - embed_params
     if shape.kind == "train":

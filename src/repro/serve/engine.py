@@ -13,8 +13,7 @@ through repeated ``decode_step`` calls or a single prefill pass for scoring,
 from __future__ import annotations
 
 from dataclasses import dataclass
-from functools import partial
-from typing import Any, Optional
+from typing import Optional
 
 import jax
 import jax.numpy as jnp

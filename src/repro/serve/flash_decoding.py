@@ -14,7 +14,6 @@ sharding works for every arch and keeps the per-chip cache slice O(S/16).
 
 from __future__ import annotations
 
-from functools import partial
 
 import jax
 import jax.numpy as jnp

@@ -27,8 +27,8 @@ import json
 import os
 import shutil
 import threading
-from dataclasses import asdict, dataclass, field
-from typing import Any, Optional
+from dataclasses import asdict, dataclass
+from typing import Optional
 
 import jax
 import numpy as np

@@ -20,7 +20,6 @@ holds.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp

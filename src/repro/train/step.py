@@ -8,11 +8,9 @@ specs; activations follow the in-model constraints.
 
 from __future__ import annotations
 
-from functools import partial
-from typing import Any, Optional
+from typing import Optional
 
 import jax
-import jax.numpy as jnp
 
 from .optimizer import AdamWConfig, adamw_update, init_opt_state
 

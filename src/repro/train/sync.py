@@ -15,7 +15,6 @@ in ``benchmarks/dcn_compression.py``.
 
 from __future__ import annotations
 
-from functools import partial
 
 import jax
 import jax.numpy as jnp

@@ -1,0 +1,88 @@
+"""The CI perf-trajectory gate: baseline comparison semantics.
+
+``benchmarks/run.py`` writes one ``BENCH_<name>.json`` per executed
+benchmark and fails when any deterministic metric is >10% worse than the
+committed ``benchmarks/baseline.json``.  These tests pin the comparison
+semantics the CI job relies on: direction-aware tolerance, executed-set
+scoping, and coverage-rot detection (a baseline metric that vanished fails).
+"""
+
+import os
+import sys
+
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from benchmarks.common import record_metric
+from benchmarks.run import BASELINE_PATH, check_against_baseline
+
+BASE = {
+    "bench": {
+        "epoch_s": {"value": 100.0, "better": "lower"},
+        "hit_rate": {"value": 0.90, "better": "higher"},
+        "remote_warm_bytes": {"value": 0.0, "better": "lower"},
+    }
+}
+
+
+def _got(epoch_s=100.0, hit_rate=0.90, remote=0.0):
+    return {
+        "bench": {
+            "epoch_s": {"value": epoch_s, "better": "lower"},
+            "hit_rate": {"value": hit_rate, "better": "higher"},
+            "remote_warm_bytes": {"value": remote, "better": "lower"},
+        }
+    }
+
+
+def test_within_tolerance_passes():
+    assert check_against_baseline(BASE, _got(epoch_s=109.9, hit_rate=0.82), {"bench"}) == []
+
+
+def test_lower_better_regression_fails():
+    problems = check_against_baseline(BASE, _got(epoch_s=111.0), {"bench"})
+    assert len(problems) == 1 and "epoch_s" in problems[0]
+
+
+def test_higher_better_regression_fails():
+    problems = check_against_baseline(BASE, _got(hit_rate=0.80), {"bench"})
+    assert len(problems) == 1 and "hit_rate" in problems[0]
+
+
+def test_zero_baseline_rejects_any_growth():
+    """remote_warm_bytes baseline is 0: any warm remote traffic is a bug."""
+    problems = check_against_baseline(BASE, _got(remote=1.0), {"bench"})
+    assert len(problems) == 1 and "remote_warm_bytes" in problems[0]
+
+
+def test_vanished_metric_fails():
+    got = _got()
+    del got["bench"]["hit_rate"]
+    problems = check_against_baseline(BASE, got, {"bench"})
+    assert len(problems) == 1 and "no longer emitted" in problems[0]
+
+
+def test_only_executed_benchmarks_are_gated():
+    """--only fsbench must not fail on absent rebalance metrics."""
+    assert check_against_baseline(BASE, {}, set()) == []
+    assert check_against_baseline(BASE, {}, {"other"}) == []
+
+
+def test_committed_baseline_is_well_formed():
+    """The repo's baseline.json parses and every entry declares a direction."""
+    import json
+
+    with open(BASELINE_PATH) as fh:
+        baseline = json.load(fh)
+    assert {"table3", "table5", "fsbench", "rebalance"} <= set(baseline)
+    for bench, metrics in baseline.items():
+        assert metrics, bench
+        for name, spec in metrics.items():
+            assert spec["better"] in ("lower", "higher"), (bench, name)
+            float(spec["value"])
+
+
+def test_record_metric_rejects_bad_direction():
+    with pytest.raises(ValueError, match="better"):
+        record_metric("x", "y", 1.0, better="sideways")

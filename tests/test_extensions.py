@@ -42,7 +42,9 @@ def test_ssd_scan_matches_sequential_recurrence():
     want = np.zeros((B, S, H, chd), np.float64)
     for t in range(S):
         a = np.exp(np.asarray(lf[:, t], np.float64))[..., None, None]
-        outer = np.asarray(x_in[:, t], np.float64)[..., None] * np.asarray(b_in[:, t], np.float64)[..., None, :]
+        outer = np.asarray(x_in[:, t], np.float64)[..., None] * np.asarray(
+            b_in[:, t], np.float64
+        )[..., None, :]
         h = a * h + outer
         want[:, t] = np.einsum("bhcn,bhn->bhc", h, np.asarray(c_out[:, t], np.float64))
 

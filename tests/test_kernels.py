@@ -43,11 +43,15 @@ def test_flash_attention_sweep(dtype, B, Hq, Hkv, Sq, Skv, hd, causal, window, b
     out = flash_attention(q, k, v, causal=causal, window=window,
                           block_q=bq, block_k=bk, interpret=True)
     want = ref.attention_ref(q, k, v, causal=causal, window=window)
-    np.testing.assert_allclose(np.asarray(out, np.float32), np.asarray(want, np.float32), **_tol(dtype))
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(want, np.float32), **_tol(dtype)
+    )
 
 
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
-@pytest.mark.parametrize("causal,window,pairs", [(True, 0, True), (True, 128, True), (False, 0, False)])
+@pytest.mark.parametrize(
+    "causal,window,pairs", [(True, 0, True), (True, 128, True), (False, 0, False)]
+)
 def test_xla_blockwise_matches_oracle(dtype, causal, window, pairs):
     """The model-side XLA attention (both enumerations) equals the oracle."""
     q = _rand((2, 4, 256, 32), dtype)
@@ -56,7 +60,9 @@ def test_xla_blockwise_matches_oracle(dtype, causal, window, pairs):
     out = blockwise_attention(q, k, v, causal=causal, window=window,
                               q_block=64, kv_block=64, pairs=pairs)
     want = ref.attention_ref(q, k, v, causal=causal, window=window)
-    np.testing.assert_allclose(np.asarray(out, np.float32), np.asarray(want, np.float32), **_tol(dtype))
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(want, np.float32), **_tol(dtype)
+    )
 
 
 def test_pairs_equals_rectangle():
@@ -90,7 +96,9 @@ def test_decode_attention_sweep(dtype, valid, window):
         s = jnp.where(jnp.asarray(keep)[None, None, None, None], s, -1e30)
         p = jax.nn.softmax(s, -1)
         want = jnp.einsum("bhgqk,bhkd->bhgqd", p, vc.astype(jnp.float32)).reshape(B, Hq, 1, hd)
-    np.testing.assert_allclose(np.asarray(out, np.float32), np.asarray(want, np.float32), **_tol(dtype))
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(want, np.float32), **_tol(dtype)
+    )
 
 
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
@@ -100,7 +108,9 @@ def test_rmsnorm_sweep(dtype, rows, D, block):
     g = _rand((D,), dtype)
     out = rmsnorm(x, g, block_rows=block, interpret=True)
     want = ref.rmsnorm_ref(x, g)
-    np.testing.assert_allclose(np.asarray(out, np.float32), np.asarray(want, np.float32), **_tol(dtype))
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(want, np.float32), **_tol(dtype)
+    )
 
 
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])

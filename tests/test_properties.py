@@ -1,7 +1,6 @@
 """Hypothesis property tests on system invariants."""
 
 import numpy as np
-import pytest
 from hypothesis import given, settings
 from hypothesis import strategies as st
 

@@ -1,7 +1,5 @@
 """Unit tests for the discrete-event flow kernel."""
 
-import pytest
-
 from repro.core.simclock import Resource, SimClock
 
 

@@ -1,7 +1,6 @@
 """LRU stack-distance model vs exact LRU (incl. hypothesis sweeps)."""
 
 import numpy as np
-import pytest
 from hypothesis import given, settings
 from hypothesis import strategies as st
 

@@ -2,7 +2,6 @@
 
 import os
 import signal
-import tempfile
 
 import jax
 import jax.numpy as jnp
@@ -13,7 +12,7 @@ from jax.sharding import PartitionSpec as P
 from repro.configs import ARCHS
 from repro.core import build_cluster
 from repro.data import TokenDatasetSpec, TokenLoader, materialize_token_dataset
-from repro.models import build_model, params as PM
+from repro.models import build_model
 from repro.train import (
     AdamWConfig,
     CheckpointManager,
