@@ -178,6 +178,102 @@ def table5_uplink():
     return rows, lines
 
 
+# ------------------------------------------------- §5 headline: 2.1x, 2x util
+def headline_repro():
+    """End-to-end reproduction of the paper's headline claim (§5): striping
+    the dataset across node-local NVMe lifts epoch throughput ~2.1x over a
+    10 Gb/s-class NFS baseline and roughly doubles GPU utilization.
+
+    AlexNet-scale setup: 4 nodes x 4 GPUs, 150 GB dataset, replication 2 —
+    the contention-aware read scheduler (repro.core.readsched) spreads
+    replica reads by live queue depth, which is what makes the cached path
+    sustain its rate under 4 concurrent jobs.  Everything is deterministic
+    simulated time; the run *asserts* the speedup lands in [1.8x, 2.4x] and
+    the GPU-utilization gain is >= 1.8x, and records both for the CI
+    perf-trajectory gate (benchmarks/baseline.json).
+    """
+    from dataclasses import replace as _rp
+
+    rows = []
+    lines = ["Headline — Hoard vs 10 Gb/s NFS (4 nodes x 4 GPUs, 150 GB, 60 epochs)"]
+    cal = _rp(PAPER, dataset_bytes=150 * 1e9)            # the paper's ~150 GB corpus
+    topo_cfg = TopologyConfig(remote_nic_bw=10 * Gb)     # 10 Gb/s REM baseline pipe
+
+    profs, results = {}, {}
+    for b, kw in (("rem", {}), ("hoard", {"replication": 2})):
+        (res, su, e1, st), us = timed(
+            lambda b=b, kw=kw: epoch_profile(
+                b, epochs=3, n_jobs=4, topo_cfg=topo_cfg, cal=cal, **kw
+            )
+        )
+        profs[b], results[b] = (su, e1, st), res
+        rows.append(Row(f"headline/{b}", us, f"e1={e1:.0f}s;steady={st:.0f}s"))
+        record_metric("headline", f"{b}_steady_s", st, better="lower")
+
+    # ---- the 2.1x: projected 60-epoch duration ratio (paper Table 4 horizon)
+    speedup = project_total(*profs["rem"], 60) / project_total(*profs["hoard"], 60)
+    # ---- the 2x utilization: accelerator-busy fraction of a cached (steady)
+    # epoch vs the REM baseline's steady epoch
+    compute_epoch_s = cal.dataset_bytes / cal.gpu_bw
+    util = {b: compute_epoch_s / profs[b][2] for b in ("rem", "hoard")}
+    util_ratio = util["hoard"] / util["rem"]
+    # full-run (fill included) utilization via the per-job measurement too
+    job_util = {
+        b: sum(
+            j.gpu_utilization(cal.compute_time_per_step()) for j in results[b].jobs
+        ) / len(results[b].jobs)
+        for b in ("rem", "hoard")
+    }
+
+    # ---- read-side balance: with replication 2 the per-replica-SLOT
+    # served-byte spread must stay flat (max/mean = 1.0 is perfect).  Slot
+    # counting is what detects a replica-0 hotspot — per-node totals stay
+    # flat under one because round-robin primaries spread slot-0 copies.
+    sched = results["hoard"].store.readsched
+    imbalance = sched.read_imbalance("imagenet")
+    if imbalance is None:               # before record_metric: float(None) would
+        raise RuntimeError("no replica reads recorded — read path bypassed?")
+
+    # ---- micro-assert (post-vectorization): batch and scalar locate agree
+    store = results["hoard"].store
+    reader = store.topology.nodes[1]
+    items = np.arange(0, cal.dataset_items, 9973, dtype=np.int64)
+    batch = store.locate_batch("imagenet", items, reader)
+    for k in range(0, len(items), 7):
+        if batch[k] != store.locate("imagenet", int(items[k]), reader).node_id:
+            raise RuntimeError("locate_batch disagrees with scalar locate")
+
+    record_metric("headline", "speedup_60ep", speedup, better="higher")
+    record_metric("headline", "gpu_util_ratio", util_ratio, better="higher")
+    record_metric("headline", "hoard_gpu_util", util["hoard"], better="higher")
+    record_metric("headline", "replica_read_imbalance", imbalance, better="lower")
+
+    rows.append(Row("headline/speedup", 0.0, f"60ep={speedup:.2f}x"))
+    rows.append(
+        Row("headline/gpu_util", 0.0,
+            f"rem={util['rem']:.2f};hoard={util['hoard']:.2f};ratio={util_ratio:.2f}x")
+    )
+    lines.append(f"  epoch-time speedup (60 ep)   {speedup:5.2f}x   (paper: 2.1x)")
+    lines.append(
+        f"  GPU utilization  rem {util['rem']*100:4.0f}%  hoard {util['hoard']*100:4.0f}%"
+        f"  -> {util_ratio:4.2f}x   (paper: ~2x)"
+    )
+    lines.append(
+        f"  full-run (fill incl.)  rem {job_util['rem']*100:4.0f}%"
+        f"  hoard {job_util['hoard']*100:4.0f}%"
+    )
+    lines.append(f"  replica-slot read imbalance (max/mean, r=2)  {imbalance:5.3f}")
+
+    # hard acceptance band — a failed reproduction must fail the harness
+    if not (1.8 <= speedup <= 2.4):
+        raise RuntimeError(f"headline speedup {speedup:.2f}x outside [1.8, 2.4]")
+    if util_ratio < 1.8:
+        raise RuntimeError(f"GPU-utilization gain {util_ratio:.2f}x < 1.8x")
+    if imbalance > 1.2:
+        raise RuntimeError(f"replica read imbalance {imbalance:.3f} exceeds 20%")
+    return rows, lines
+
+
 # ----------------------------------------------- beyond-paper: misplacement
 def misplaced_job_scenario():
     """Mechanistic (not projected) misplacement: jobs on a different rack

@@ -101,6 +101,7 @@ def main() -> None:
         ("fig5", paper_tables.fig5_bandwidth),
         ("table4", paper_tables.table4_network),
         ("table5", paper_tables.table5_uplink),
+        ("headline", paper_tables.headline_repro),
         ("coplacement", paper_tables.misplaced_job_scenario),
         ("coldstart", coldstart_rows),
         ("multitenant", multitenant_rows),
@@ -112,7 +113,10 @@ def main() -> None:
     if args.quick:
         benches = [
             b for b in benches
-            if b[0] in ("table3", "table5", "roofline", "ingest", "fsbench", "rebalance")
+            if b[0] in (
+                "table3", "table5", "headline", "roofline", "ingest",
+                "fsbench", "rebalance",
+            )
         ]
     if args.only:
         keep = set(args.only.split(","))

@@ -35,6 +35,7 @@ from .loader import (
 from .metrics import ClusterMetrics, JobMetrics
 from .placement import JobSpec, Placement, PlacementEngine
 from .prefetch import FillTracker, PrefetchScheduler
+from .readsched import ReadScheduler
 from .rebalance import (
     ChunkMove,
     MembershipEpoch,
@@ -67,7 +68,8 @@ __all__ = [
     "HoardBackend", "HoardLoader", "JobMetrics", "JobRecord", "JobResult",
     "JobSpec", "LRUCache", "LRUStackModel", "LocalCopyBackend",
     "MANIFEST_SCHEMA_VERSION", "MembershipEpoch", "Node", "PAPER", "PagePool",
-    "Placement", "PlacementEngine", "PrefetchScheduler", "RebalanceError",
+    "Placement", "PlacementEngine", "PrefetchScheduler", "ReadScheduler",
+    "RebalanceError",
     "RebalancePlan", "Rebalancer", "RemoteBackend", "Resource", "ScenarioResult",
     "SimClock", "StripeDataPlane", "StripeError", "StripeManifest", "StripeStore",
     "Topology", "TopologyConfig", "TrainingJob", "WorkloadCalibration",

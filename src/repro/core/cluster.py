@@ -39,6 +39,9 @@ class ScenarioResult:
     sim_seconds: float
     cal: WorkloadCalibration = field(default_factory=lambda: PAPER)
     workload: Optional[WorkloadResult] = None   # full engine records/events
+    # the scenario's stripe store — benchmarks read its contention-aware
+    # read scheduler (per-replica served bytes, queue telemetry) post-run
+    store: Optional[StripeStore] = None
 
     @property
     def mean_epoch_times(self) -> list[float]:
@@ -93,6 +96,7 @@ def run_scenario(
     fill: str = "afm",
     prefetch_inflight: int = 8,
     seed: int = 0,
+    replication: int = 1,
 ) -> ScenarioResult:
     """Run ``n_jobs`` identical jobs over the chosen data path.
 
@@ -100,7 +104,9 @@ def run_scenario(
     ``mdr`` sets the memory/dataset ratio (Figure 4); ``cache_nodes`` /
     ``job_nodes`` override placement (Section 4.5 misplacement study);
     ``prefetch`` pre-populates the cache before the jobs start (the paper's
-    asynchronous pre-fetch usage model).
+    asynchronous pre-fetch usage model); ``replication`` stripes each chunk
+    onto that many nodes — the contention-aware read scheduler then spreads
+    replica reads by live queue depth (headline reproduction runs r=2).
 
     ``fill`` selects the Hoard cold-start model (ignored for rem/nvme):
 
@@ -124,7 +130,9 @@ def run_scenario(
             fill_bw=cal.fill_bw * remote_bw_scale,
         )
         topo_cfg = replace(topo_cfg, remote_nic_bw=topo_cfg.remote_nic_bw * remote_bw_scale)
-    clock, topo, store, cache, engine = build_cluster(topo_cfg, cal=cal)
+    clock, topo, store, cache, engine = build_cluster(
+        topo_cfg, cal=cal, replication=replication
+    )
     metrics = ClusterMetrics()
 
     spec = DatasetSpec("imagenet", "nfs://store/imagenet", cal.dataset_items, int(cal.item_bytes))
@@ -179,4 +187,6 @@ def run_scenario(
             )
         )
     wl = scheduler.run(jobs)
-    return ScenarioResult(backend, wl.jobs, metrics, clock.now, cal, workload=wl)
+    return ScenarioResult(
+        backend, wl.jobs, metrics, clock.now, cal, workload=wl, store=store
+    )

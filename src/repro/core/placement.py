@@ -84,12 +84,13 @@ class PlacementEngine:
         """Pick a cache-node subset with enough aggregate free capacity.
 
         Prefers nodes near ``near`` (a job's compute nodes), then nodes with
-        the least *ingest pressure* — pending fill bytes plus in-flight
-        migration bytes targeting the node (both stream across its NIC and
-        NVMe write queue, so stacking a new dataset there serialises with
-        that traffic) — then emptiest nodes first so stripes spread across
-        the cluster's free capacity.  With an elastic rebalancer attached,
-        only live membership-view nodes qualify.
+        the least *serving pressure* — pending fill bytes, in-flight
+        migration bytes targeting the node, and the live read-queue backlog
+        the contention-aware read scheduler reports (all of it crosses the
+        node's disks and NIC, so stacking a new dataset there serialises
+        with that traffic) — then emptiest nodes first so stripes spread
+        across the cluster's free capacity.  With an elastic rebalancer
+        attached, only live membership-view nodes qualify.
         """
         need = float(total_bytes)
         members = self._members()
@@ -100,7 +101,8 @@ class PlacementEngine:
             return (
                 0 if n.rack_id in anchor_racks else (1 if n.pod_id in anchor_pods else 2),
                 self.cache.store.pending_fill_bytes(n.node_id)
-                + self.cache.store.migration_in_bytes(n.node_id),
+                + self.cache.store.migration_in_bytes(n.node_id)
+                + self.cache.store.read_load_bytes(n.node_id),
                 self.cache.store.bytes_on_node(n.node_id),
                 n.node_id,
             )
@@ -155,12 +157,14 @@ class PlacementEngine:
 
         def score(n: Node):
             # locality first (node > rack > pod, Section 4.5); among equals,
-            # avoid nodes still ingesting an on-demand fill or in-flight
-            # migration chunks — their NIC and NVMe write queue are already
-            # carrying remote->stripe or rebalance traffic
-            ingest = self.cache.store.pending_fill_bytes(
-                n.node_id
-            ) + self.cache.store.migration_in_bytes(n.node_id)
+            # avoid nodes still ingesting an on-demand fill, carrying
+            # in-flight migration chunks, or with a deep read-serving
+            # backlog — their NIC and disk queues are already busy
+            ingest = (
+                self.cache.store.pending_fill_bytes(n.node_id)
+                + self.cache.store.migration_in_bytes(n.node_id)
+                + self.cache.store.read_load_bytes(n.node_id)
+            )
             if not cached_nodes:
                 return (3, ingest, n.node_id)
             d = min(self.topology.distance(n, c) for c in cached_nodes)

@@ -151,12 +151,18 @@ class FillTracker:
                 man.chunk_bytes,
             )
         ]
-        # replica fan-out: peer copies from the primary (never re-fetched)
+        # replica fan-out: peer copies from the primary (never re-fetched).
+        # The source side is a *read* of the just-landed chunk, so it crosses
+        # the primary's per-disk read queue (readsched) like any stripe read.
         for node_id in replicas[1:]:
             peer = self.topology.node(node_id)
             flows.append(
                 self.clock.transfer(
-                    [primary.nvme, *self.topology.path(primary, peer), peer.nvme],
+                    [
+                        self.store.readsched.disk(primary.node_id, chunk),
+                        *self.topology.path(primary, peer),
+                        peer.nvme,
+                    ],
                     man.chunk_bytes,
                 )
             )

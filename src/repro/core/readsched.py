@@ -1,0 +1,196 @@
+"""Contention-aware data-plane read scheduler (per-disk / per-NIC queues).
+
+The paper's §5 headline — 2.1x epoch throughput over 10 Gb/s NFS, doubled
+GPU utilization — only reproduces if the *read side* of the cache is modeled
+as a contended service, not an oracle: FanStore (Zhang et al. 2018) and
+Krichevsky et al. 2021 both show that read-load distribution across cache
+servers, not just locality, determines end-to-end training throughput.  This
+module supplies the two missing mechanisms:
+
+**Timed read queues.**  Each cache node's NVMe devices become *individual*
+:class:`~repro.core.simclock.Resource` queues (``node<i>.disk<k>``, one per
+physical disk, ``nvme_bw_per_disk`` each) instead of one aggregate.  Chunks
+map to disks deterministically (``chunk % n_disks`` — the stripe-within-a-
+node layout), and every read — :class:`~repro.core.loader.StripeDataPlane`
+batches, HoardFS ``pread``/``pread_batch`` (which resolve through the same
+plane) and rebalance repair/peer-copy source reads — is booked as a flow
+through its chunk's disk queue plus the network path.  A hot replica's queue
+therefore *slows its readers* via max-min fair sharing, exactly like a real
+saturated device.
+
+**Load-aware replica selection.**  :meth:`StripeStore.locate_batch
+<repro.core.stripestore.StripeStore.locate_batch>` scores each candidate
+replica as::
+
+    cost(replica) = distance_class(reader, replica)          # 0..3 hops
+                  + queued_bytes(replica) / queue_hop_bytes  # drain pressure
+
+where ``queued_bytes`` samples the node's live disk-read + NIC-tx queues
+(:meth:`Resource.queued_bytes`; the NVMe *write* queue is excluded — fill
+and migration landings are priced separately by the placement engine's
+``pending_fill_bytes``/``migration_in_bytes`` terms and must not be
+double-counted).  ``queue_hop_bytes`` converts queue
+depth into locality-hop units: with the default 64 MB, a replica with ~64 MB
+more backlog than a peer loses one locality class — deep queues override
+closeness, light ones defer to it.  Exact cost ties (the common cold-cluster
+case) break by a *stable hash* of ``(reader, chunk)``, so equidistant
+readers fan out across a chunk's replica set instead of hammering replica 0
+(the lowest-node-id hotspot this module was built to fix).
+"""
+
+from __future__ import annotations
+
+from collections import defaultdict
+from typing import TYPE_CHECKING, Optional
+
+import numpy as np
+
+from .simclock import Resource
+
+if TYPE_CHECKING:  # pragma: no cover - typing only
+    from .topology import Topology
+
+#: queued bytes that cost one locality hop in replica scoring (see module doc)
+QUEUE_HOP_BYTES = 64e6
+
+# SplitMix64 constants — a cheap, PYTHONHASHSEED-independent integer mix.
+_MIX2 = np.uint64(0xBF58476D1CE4E5B9)
+_MIX3 = np.uint64(0x94D049BB133111EB)
+
+
+def stable_mix(chunks: np.ndarray, salt: int) -> np.ndarray:
+    """Deterministic per-(salt, chunk) uint64 hash, vectorised over chunks.
+
+    Used for replica tie-breaking: must be stable across processes (no
+    ``hash()``, which PYTHONHASHSEED randomizes) and cheap enough for the
+    per-batch hot path.  SplitMix64 finalizer over ``chunk ^ mix(salt)``.
+    """
+    x = chunks.astype(np.uint64, copy=True)
+    # salt mixed in python ints: numpy *scalar* overflow warns, arrays wrap
+    x ^= np.uint64(((salt + 1) * 0x9E3779B97F4A7C15) & 0xFFFFFFFFFFFFFFFF)
+    x ^= x >> np.uint64(30)
+    x *= _MIX2
+    x ^= x >> np.uint64(27)
+    x *= _MIX3
+    x ^= x >> np.uint64(31)
+    return x
+
+
+class ReadScheduler:
+    """Per-node read-queue fabric + load signal + per-replica accounting.
+
+    One instance per :class:`~repro.core.stripestore.StripeStore` (created by
+    the store itself).  It owns the per-disk read-queue Resources, answers
+    the queue-depth question replica scoring asks, and keeps cumulative
+    per-(dataset, node) served-read-byte counters — the observable behind
+    the "no replica-0 hotspot" balance assertions and benchmarks.
+    """
+
+    def __init__(self, topology: "Topology", *, queue_hop_bytes: float = QUEUE_HOP_BYTES):
+        self.topology = topology
+        self.clock = topology.clock
+        self.queue_hop_bytes = float(queue_hop_bytes)
+        cfg = topology.cfg
+        self.disks: dict[int, list[Resource]] = {
+            n.node_id: [
+                Resource(f"node{n.node_id}.disk{k}", cfg.nvme_bw_per_disk)
+                for k in range(max(1, cfg.nvme_disks_per_node))
+            ]
+            for n in topology.nodes
+        }
+        self.n_disks = max(1, cfg.nvme_disks_per_node)
+        # cumulative read bytes served per (dataset, node) — replica-balance
+        # telemetry; monotonic, never a live-queue signal
+        self.served_bytes: dict[tuple[str, int], float] = defaultdict(float)
+        # cumulative read bytes per (dataset, replica *slot*): the hotspot
+        # observable.  Per-node totals cannot see a slot-0 regression —
+        # round-robin primaries spread slot-0 copies across all nodes — so
+        # the balance gate must count slots, not nodes.
+        self._slot_bytes: dict[str, np.ndarray] = {}
+        self.reads_issued = 0
+        # queue_vector memo: queue state at one instant only changes when the
+        # flow set changes, which SimClock.flow_seq versions exactly
+        self._qmemo: tuple[float, int, np.ndarray] | None = None
+
+    # ------------------------------------------------------------- disk queues
+    def disk(self, node_id: int, chunk: int) -> Resource:
+        """The disk queue serving ``chunk`` on ``node_id`` (chunk % n_disks)."""
+        disks = self.disks[node_id]
+        return disks[chunk % len(disks)]
+
+    # -------------------------------------------------------------- load signal
+    def queue_bytes(self, node_id: int) -> float:
+        """Live *read-serving* backlog of a node: disk read queues + NIC-tx.
+
+        Deliberately excludes the NVMe write queue: in-flight fill and
+        migration landings are already scored by the placement engine's
+        ``pending_fill_bytes`` / ``migration_in_bytes`` terms, so counting
+        their write flows here would double-charge a filling node; and in
+        the flow network writes cross separate Resources, so they do not
+        actually delay a read.
+        """
+        now = self.clock.now
+        q = self.topology.node(node_id).nic_tx.queued_bytes(now)
+        for disk in self.disks[node_id]:
+            q += disk.queued_bytes(now)
+        return q
+
+    def queue_vector(self) -> np.ndarray:
+        """``queue_bytes`` for every node, as locality-hop penalties.
+
+        Memoized on ``(clock.now, clock.flow_seq)``: between flow-set changes
+        at one instant the answer is constant, and the scalar ``locate`` /
+        ``read_item`` path calls this once per item.
+        """
+        memo = self._qmemo
+        key = (self.clock.now, self.clock.flow_seq)
+        if memo is not None and memo[:2] == key:
+            return memo[2]
+        vec = (
+            np.asarray([self.queue_bytes(n.node_id) for n in self.topology.nodes])
+            / self.queue_hop_bytes
+        )
+        self._qmemo = (*key, vec)
+        return vec
+
+    # -------------------------------------------------------------- accounting
+    def note_read(self, dataset_id: str, node_id: int, nbytes: float) -> None:
+        """Record a stripe read served by ``node_id`` (balance telemetry)."""
+        self.served_bytes[(dataset_id, node_id)] += float(nbytes)
+        self.reads_issued += 1
+
+    def note_slot_reads(self, dataset_id: str, slot_bytes: np.ndarray) -> None:
+        """Accumulate read bytes per replica *slot* (len = replica width)."""
+        cur = self._slot_bytes.get(dataset_id)
+        if cur is None:
+            self._slot_bytes[dataset_id] = np.asarray(slot_bytes, dtype=float).copy()
+        elif len(cur) >= len(slot_bytes):
+            cur[: len(slot_bytes)] += slot_bytes
+        else:                       # replica width grew (repair to higher r)
+            grown = np.zeros(len(slot_bytes))
+            grown[: len(cur)] = cur
+            grown += slot_bytes
+            self._slot_bytes[dataset_id] = grown
+
+    def replica_read_bytes(self, dataset_id: str) -> dict[int, float]:
+        """Cumulative read bytes served per node for one dataset."""
+        return {
+            nid: b for (ds, nid), b in self.served_bytes.items() if ds == dataset_id
+        }
+
+    def slot_read_bytes(self, dataset_id: str) -> np.ndarray:
+        """Cumulative read bytes per replica slot (zeros included)."""
+        return self._slot_bytes.get(dataset_id, np.zeros(0)).copy()
+
+    def read_imbalance(self, dataset_id: str) -> Optional[float]:
+        """max/mean of per-*slot* served read bytes (1.0 = perfectly even).
+
+        Counted over replica slots, zero-serving slots included: per-node
+        totals stay flat under a slot-0 hotspot (round-robin primaries
+        spread slot-0 copies over all nodes), so only the slot view can
+        gate the no-hotspot property.
+        """
+        slots = self._slot_bytes.get(dataset_id)
+        if slots is None or slots.sum() <= 0:
+            return None
+        return float(slots.max() / slots.mean())

@@ -427,10 +427,13 @@ class Rebalancer:
             path = [*head, *self.topology.path_from_remote(dst_node), dst_node.nvme]
             self.metrics.count("remote_bytes", mv.nbytes)
         else:
+            # the source side of a move/repair is a chunk *read*: it crosses
+            # the per-disk read queue (readsched) so repair traffic contends
+            # with — and is slowed by — foreground stripe reads honestly
             src_node = self.topology.node(mv.src)
             path = [
                 *head,
-                src_node.nvme,
+                self.store.readsched.disk(mv.src, mv.chunk),
                 *self.topology.path(src_node, dst_node),
                 dst_node.nvme,
             ]

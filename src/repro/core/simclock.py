@@ -37,7 +37,11 @@ class Resource:
             raise ValueError(f"resource {name!r} needs positive bandwidth, got {bw}")
         self.name = name
         self.bw = float(bw)
-        self.flows: set["Flow"] = set()
+        # insertion-ordered (dict) so iteration is fid order for free: float
+        # sums and max-min tie-breaks are order-sensitive, and set order
+        # varies per process (object ids), which the load-aware read
+        # scheduler would surface as cross-process metric wobble
+        self.flows: dict["Flow", None] = {}
         self.busy_bytes = 0.0  # total bytes that crossed this resource
 
     def utilization(self, horizon: float) -> float:
@@ -45,6 +49,23 @@ class Resource:
         if horizon <= 0:
             return 0.0
         return min(1.0, (self.busy_bytes / self.bw) / horizon)
+
+    def queued_bytes(self, now: Optional[float] = None) -> float:
+        """Bytes still in flight across this resource (its queue depth).
+
+        ``Flow.remaining`` is only settled lazily (on the next arrival or
+        departure), so pass ``now`` to extrapolate each flow forward at its
+        current rate — the load-aware read scheduler samples queue depth
+        *between* settle points when scoring replicas.
+        """
+        total = 0.0
+        for f in self.flows:                   # insertion (fid) order: the sum
+            rem = f.remaining                  # is bit-reproducible
+            if now is not None:
+                rem -= f.rate * (now - f.settled_at)
+            if rem > 0:
+                total += rem
+        return total
 
     def __repr__(self) -> str:  # pragma: no cover - debug aid
         return f"Resource({self.name}, {self.bw/1e6:.1f} MB/s, {len(self.flows)} flows)"
@@ -132,8 +153,13 @@ class SimClock:
         self._heap: list[_Scheduled] = []
         self._seq = itertools.count()
         self._fid = itertools.count()
-        self._flows: set[Flow] = set()
+        # insertion-ordered (see Resource.flows): iteration is fid order
+        self._flows: dict[Flow, None] = {}
         self._completion_handle: Optional[_Scheduled] = None
+        # bumped whenever the flow set changes (start/finish); (now, flow_seq)
+        # keys queue-depth memoization in the read scheduler — between bumps
+        # at one instant, every Resource's queued_bytes(now) is constant
+        self.flow_seq = 0
 
     # ------------------------------------------------------------------ events
     def event(self) -> Event:
@@ -188,15 +214,23 @@ class SimClock:
             return ev
         self._settle()
         flow = Flow(next(self._fid), path, nbytes, ev, self.now)
-        self._flows.add(flow)
+        self.flow_seq += 1
+        self._flows[flow] = None
         for res in path:
-            res.flows.add(flow)
+            res.flows[flow] = None
         self._reallocate()
         return ev
 
     # ------------------------------------------------------- max-min fairness
     def _settle(self) -> None:
-        """Advance every in-flight flow's `remaining` to the current time."""
+        """Advance every in-flight flow's `remaining` to the current time.
+
+        Flows iterate in fid order here and in ``_reallocate``: sets order by
+        object id, which varies per process, and float accumulation plus
+        max-min tie-breaks are order-sensitive — the load-aware read
+        scheduler samples both, so cross-process bit-reproducibility needs a
+        deterministic order.
+        """
         for flow in self._flows:
             moved = flow.rate * (self.now - flow.settled_at)
             if moved > 0:
@@ -215,7 +249,7 @@ class SimClock:
             self._cancel_completion()
             return
 
-        unassigned = set(flows)
+        unassigned = dict.fromkeys(flows)     # fid order (float-sum stability)
         capacity: dict[Resource, float] = {}
         load: dict[Resource, int] = {}
         for f in flows:
@@ -238,7 +272,7 @@ class SimClock:
             settled = [f for f in unassigned if bottleneck in f.path]
             for f in settled:
                 f.rate = share
-                unassigned.discard(f)
+                unassigned.pop(f, None)
                 for res in f.path:
                     capacity[res] -= share
                     load[res] -= 1
@@ -276,9 +310,10 @@ class SimClock:
         self._reallocate()
 
     def _finish(self, flow: Flow) -> None:
-        self._flows.discard(flow)
+        self.flow_seq += 1
+        self._flows.pop(flow, None)
         for res in flow.path:
-            res.flows.discard(flow)
+            res.flows.pop(flow, None)
         # defer the event so completions never reenter the solver
         self.schedule(0.0, flow.event.set)
 

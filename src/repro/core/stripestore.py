@@ -28,6 +28,7 @@ from typing import Callable, Optional, Sequence
 
 import numpy as np
 
+from .readsched import ReadScheduler, stable_mix
 from .topology import Node, Topology
 
 
@@ -120,10 +121,18 @@ class StripeStore:
         self.topology = topology
         self.root = root
         self.manifests: dict[str, StripeManifest] = {}
-        # per-dataset first-replica array (chunk -> node, -1 = data lost),
-        # cached for locate_batch's per-batch hot path; invalidated whenever
+        # contention-aware read scheduler: per-disk read queues, live load
+        # signal for replica scoring, per-replica served-byte telemetry
+        self.readsched = ReadScheduler(topology)
+        # per-dataset replica matrix (n_chunks x max-replicas node ids, short
+        # rows -1-padded, an all--1 row = data lost), cached for
+        # locate_batch's per-batch hot path; invalidated whenever
         # fail_node/repair/drain/delete rewrite chunk placements
-        self._replica0: dict[str, np.ndarray] = {}
+        self._replica_mat: dict[str, np.ndarray] = {}
+        # per-reader distance row over all nodes (topology is immutable)
+        self._dist_rows: dict[int, np.ndarray] = {}
+        # replicas rewritten in place after a CRC/missing-file fallback
+        self.corruption_repairs = 0
         # bytes of cache data resident per node (for capacity accounting)
         self.node_usage: dict[int, int] = {n.node_id: 0 for n in topology.nodes}
         # reserved-but-unfilled bytes per node (incremental mirror of the
@@ -304,6 +313,19 @@ class StripeStore:
         """Bytes of in-flight migration traffic *sourced from* a node."""
         return self._migration_out[node_id]
 
+    def read_load_bytes(self, node_id: int) -> float:
+        """Live *read-serving* backlog of a node (readsched queue depth).
+
+        The read-side analogue of :meth:`pending_fill_bytes`: bytes queued
+        on the node's read disks and NIC-tx right now — NVMe *write*
+        backlog is excluded, because fill/migration landings are already
+        priced by ``pending_fill_bytes``/``migration_in_bytes`` and must
+        not be double-counted.  The placement engine folds this into its
+        serving-pressure scoring so compute and new stripes steer away from
+        nodes that are busy serving replica reads.
+        """
+        return self.readsched.queue_bytes(node_id)
+
     def begin_transfer(
         self, dataset_id: str, chunk: int, src: Optional[int], dst: int, kind: str = "move"
     ) -> bool:
@@ -365,7 +387,7 @@ class StripeStore:
         self._migration_in[dst] -= cb
         if src is not None:
             self._migration_out[src] -= cb
-        self._replica0.pop(dataset_id, None)
+        self._replica_mat.pop(dataset_id, None)
         if kind == "refetch":
             replicas.append(dst)
             if man.chunk_filled:
@@ -430,7 +452,7 @@ class StripeStore:
             raise StripeError(f"{dataset_id}:{chunk} is filled; move it as a flow")
         replicas = man.chunk_nodes[chunk]
         replicas[replicas.index(src)] = dst
-        self._replica0.pop(dataset_id, None)
+        self._replica_mat.pop(dataset_id, None)
         self.node_usage[src] -= man.chunk_bytes
         self.node_usage[dst] += man.chunk_bytes
         self._pending_fill[src] -= man.chunk_bytes
@@ -445,7 +467,7 @@ class StripeStore:
         if dst in replicas:
             raise StripeError(f"{dataset_id}:{chunk} already has a replica on {dst}")
         replicas.append(dst)
-        self._replica0.pop(dataset_id, None)
+        self._replica_mat.pop(dataset_id, None)
         self.node_usage[dst] += man.chunk_bytes
         self._pending_fill[dst] += man.chunk_bytes
 
@@ -461,62 +483,94 @@ class StripeStore:
         man.membership_epoch = int(epoch)
 
     # ------------------------------------------------------------------ reads
-    def _first_replica(self, dataset_id: str) -> np.ndarray:
-        """Cached chunk -> first-replica-node array (-1 where data is lost)."""
-        arr = self._replica0.get(dataset_id)
-        if arr is None:
+    def _replica_matrix(self, dataset_id: str) -> np.ndarray:
+        """Cached chunk -> candidate-replica matrix (an all--1 row = lost).
+
+        Short rows (heterogeneous replica counts mid-repair) are padded with
+        -1; the scorer masks pads to infinite cost, so a replica never
+        appears twice in one row (cycling pads would win a hash tie twice as
+        often, re-skewing the very slot balance this scheduler gates).
+        Replaces the old per-call O(chunks x replication) Python loops over
+        ``chunk_nodes`` — the matrix is built once per placement generation
+        and batches resolve with pure numpy indexing.
+        """
+        mat = self._replica_mat.get(dataset_id)
+        if mat is None:
             man = self.manifests[dataset_id]
-            arr = np.asarray(
-                [reps[0] if reps else -1 for reps in man.chunk_nodes], dtype=np.int64
+            width = max((len(r) for r in man.chunk_nodes), default=1) or 1
+            mat = np.full((man.n_chunks, width), -1, dtype=np.int64)
+            for c, reps in enumerate(man.chunk_nodes):
+                mat[c, : len(reps)] = reps
+            self._replica_mat[dataset_id] = mat
+        return mat
+
+    def _dist_row(self, reader: Node) -> np.ndarray:
+        """Cached reader -> per-node locality-class vector (topology is static)."""
+        row = self._dist_rows.get(reader.node_id)
+        if row is None:
+            row = np.asarray(
+                [self.topology.distance(reader, n) for n in self.topology.nodes],
+                dtype=np.float64,
             )
-            self._replica0[dataset_id] = arr
-        return arr
+            self._dist_rows[reader.node_id] = row
+        return row
 
     def locate(self, dataset_id: str, item: int, reader: Node) -> Node:
-        """Best replica for ``item`` read from ``reader`` (closest wins)."""
-        man = self.manifests[dataset_id]
-        replicas = man.chunk_nodes[man.chunk_of_item(item)]
-        best = min(
-            replicas,
-            key=lambda nid: self.topology.distance(reader, self.topology.node(nid)),
-        )
-        return self.topology.node(best)
+        """Best replica for ``item`` read from ``reader`` (see locate_batch)."""
+        nid = self.locate_batch(dataset_id, np.asarray([int(item)]), reader)[0]
+        return self.topology.node(int(nid))
 
     def locate_batch(self, dataset_id: str, items: np.ndarray, reader: Node) -> np.ndarray:
-        """Vectorised ``locate``: node id serving each item for ``reader``."""
+        """Vectorised contention-aware replica selection per item.
+
+        Each candidate replica scores ``locality_class + queued_bytes /
+        queue_hop_bytes`` (:mod:`repro.core.readsched`): closeness wins until
+        a replica's serving backlog costs it a locality hop, so hot replicas
+        shed readers.  Exact cost ties break by a stable hash of (reader,
+        chunk) — equidistant readers spread across the replica set instead
+        of all hammering the lowest node id.  ``locate`` delegates here, so
+        scalar and batch resolution agree by construction.
+        """
+        return self.locate_batch_with_slots(dataset_id, items, reader)[0]
+
+    def locate_batch_with_slots(
+        self, dataset_id: str, items: np.ndarray, reader: Node
+    ) -> tuple[np.ndarray, np.ndarray, int]:
+        """:meth:`locate_batch` + the chosen replica *slot* per item + width.
+
+        The slot (the source's position in ``chunk_nodes``) falls out of the
+        selection for free — column index == list index under -1 padding —
+        and feeds the read scheduler's per-slot balance telemetry, the
+        observable that catches a tie-break hotspot (per-node totals stay
+        flat under one; see :meth:`ReadScheduler.read_imbalance`).
+        """
         man = self.manifests[dataset_id]
-        chunks = items // man.items_per_chunk
-        first = self._first_replica(dataset_id)
-        best = first[chunks]
-        if np.any(best < 0):
+        chunks = np.asarray(items, dtype=np.int64) // man.items_per_chunk
+        cand = self._replica_matrix(dataset_id)[chunks]      # (batch, width)
+        if np.any(cand[:, 0] < 0):
             # some requested chunk has zero replicas (unrepaired node loss);
-            # mirror scalar locate(), which also fails for those items —
             # batches touching only healthy chunks are served normally
-            lost = np.unique(chunks[best < 0])
+            lost = np.unique(chunks[cand[:, 0] < 0])
             raise StripeError(f"{dataset_id}: chunk(s) {lost.tolist()} have no replicas")
-        if man.replication == 1:
-            # the node is whatever chunk_nodes says NOW — fail_node/repair/
-            # drain rewrite placements, so deriving it from the original
-            # round-robin layout (node_ids[chunk % nn]) returns stale nodes
-            # after any maintenance operation
-            return best
-        # pick closest replica per chunk (replication is small; loop replicas)
-        best_d = np.asarray(
-            [self.topology.distance(reader, self.topology.node(int(b))) for b in best]
-        )
-        for r in range(1, man.replication):
-            cand_all = np.asarray(
-                [reps[r % len(reps)] if reps else -1 for reps in man.chunk_nodes],
-                dtype=np.int64,
-            )
-            cand = cand_all[chunks]
-            cand_d = np.asarray(
-                [self.topology.distance(reader, self.topology.node(int(c))) for c in cand]
-            )
-            take = cand_d < best_d
-            best = np.where(take, cand, best)
-            best_d = np.where(take, cand_d, best_d)
-        return best
+        width = cand.shape[1]
+        if width == 1:                           # single candidate: no scoring
+            return cand[:, 0], np.zeros(len(cand), dtype=np.int64), 1
+        safe = np.maximum(cand, 0)               # -1 pads: index safely, then
+        cost = self._dist_row(reader)[safe] + self.readsched.queue_vector()[safe]
+        cost[cand < 0] = np.inf                  # ...price them out entirely
+        tied = cost == cost.min(axis=1, keepdims=True)
+        # rotate slot preference by the (reader, chunk) hash, modulo each
+        # row's LIVE replica count (pads sit at the row tail): a hash modulo
+        # the padded width would favour slot 0 by 2:1 on short rows, the
+        # same skew the hash exists to remove.  Among tied candidates the
+        # smallest rotated rank wins.
+        n_live = (cand >= 0).sum(axis=1).astype(np.uint64)
+        h = (stable_mix(chunks, reader.node_id) % n_live).astype(np.int64)
+        rank = (np.arange(width, dtype=np.int64)[None, :] - h[:, None]) % n_live[
+            :, None
+        ].astype(np.int64)
+        choice = np.where(tied, rank, width).argmin(axis=1)
+        return cand[np.arange(len(cand)), choice], choice, width
 
     def read_item(self, dataset_id: str, item: int, reader: Node) -> bytes:
         """Real-bytes read (materialized mode) with CRC verification."""
@@ -529,7 +583,16 @@ class StripeStore:
                 f"{dataset_id} chunk {chunk} not filled yet (on-demand fill in progress)"
             )
         src = self.locate(dataset_id, item, reader)
-        blob = self._read_chunk(man, src.node_id, chunk)
+        try:
+            blob = self._read_chunk(man, src.node_id, chunk)
+        except (ChunkCorruption, FileNotFoundError):
+            # the chosen replica is corrupt or gone: fall back through the
+            # verified path, which serves from a healthy copy AND rewrites
+            # the bad replica in place — readers (HoardFS.pread included)
+            # must never hard-fail while a healthy copy exists
+            blob = self.read_chunk_verified(
+                dataset_id, chunk, reader, skip_replica=src.node_id
+            )
         off = (item - chunk * man.items_per_chunk) * man.item_bytes
         return blob[off : off + man.item_bytes]
 
@@ -541,23 +604,57 @@ class StripeStore:
             raise ChunkCorruption(f"{man.dataset_id} chunk {chunk} on node {node_id}")
         return blob
 
-    def read_chunk_verified(self, dataset_id: str, chunk: int, reader: Node) -> bytes:
-        """Read a chunk, repairing from a healthy replica on corruption."""
+    def read_chunk_verified(
+        self,
+        dataset_id: str,
+        chunk: int,
+        reader: Node,
+        *,
+        skip_replica: Optional[int] = None,
+    ) -> bytes:
+        """Read a chunk, repairing from a healthy replica on corruption.
+
+        A replica that fails its CRC (or whose file vanished) is *rewritten
+        in place* from the healthy copy that served the fallback — leaving
+        the corrupt bytes there would make every subsequent nearby reader
+        re-read and re-CRC the bad copy before falling through again.
+
+        ``skip_replica`` marks a replica the caller already saw fail
+        (``read_item``'s fallback): it is treated as failed without the
+        wasted second read+CRC, and still healed from the good copy.
+        """
         man = self.manifests[dataset_id]
         if not man.is_filled(chunk):
             raise StripeError(
                 f"{dataset_id} chunk {chunk} not filled yet (on-demand fill in progress)"
             )
         last_err: Optional[Exception] = None
+        failed: list[int] = []
         replicas = sorted(
             man.chunk_nodes[chunk],
             key=lambda nid: self.topology.distance(reader, self.topology.node(nid)),
         )
+        # seed the known-bad replica BEFORE the scan: the heal loop below
+        # only rewrites replicas collected before the first healthy read, so
+        # a skip_replica sorting after that read would otherwise never heal
+        if skip_replica in replicas and len(replicas) > 1:
+            failed.append(skip_replica)
         for node_id in replicas:
+            if node_id == skip_replica and len(replicas) > 1:
+                continue
             try:
-                return self._read_chunk(man, node_id, chunk)
+                blob = self._read_chunk(man, node_id, chunk)
             except (ChunkCorruption, FileNotFoundError) as err:
                 last_err = err
+                failed.append(node_id)
+                continue
+            for bad in failed:          # heal the replicas the fallback skipped
+                path = self._chunk_path(dataset_id, bad, chunk)
+                os.makedirs(os.path.dirname(path), exist_ok=True)
+                with open(path, "wb") as fh:
+                    fh.write(blob)
+                self.corruption_repairs += 1
+            return blob
         raise ChunkCorruption(
             f"all {man.replication} replicas of {dataset_id}:{chunk} failed: {last_err}"
         )
@@ -565,7 +662,7 @@ class StripeStore:
     # ---------------------------------------------------------- node failure
     def fail_node(self, node_id: int) -> None:
         """Drop a node's chunks (simulated node loss)."""
-        self._replica0.clear()                    # placements change below
+        self._replica_mat.clear()                    # placements change below
         # in-flight transfers sourced from or targeting the dead node can
         # never complete; release their reservations so capacity accounting
         # stays exact (the rebalancer re-plans from the post-failure state)
@@ -589,7 +686,7 @@ class StripeStore:
         nodes, cache-node loss must not force a remote re-fetch.
         """
         man = self.manifests[dataset_id]
-        self._replica0.pop(dataset_id, None)      # placements change below
+        self._replica_mat.pop(dataset_id, None)      # placements change below
         want = target_replication or man.replication
         created = 0
         for c, replicas in enumerate(man.chunk_nodes):
@@ -624,7 +721,7 @@ class StripeStore:
         reads stop waiting on it.  Returns chunks moved.
         """
         man = self.manifests[dataset_id]
-        self._replica0.pop(dataset_id, None)      # placements change below
+        self._replica_mat.pop(dataset_id, None)      # placements change below
         moved = 0
         for c, replicas in enumerate(man.chunk_nodes):
             if node_id not in replicas or self.is_migrating(dataset_id, c):
@@ -659,7 +756,7 @@ class StripeStore:
         for ds, c in [k for k in self._migrating if k[0] == dataset_id]:
             self.abort_transfer(ds, c)
         man = self.manifests.pop(dataset_id, None)
-        self._replica0.pop(dataset_id, None)
+        self._replica_mat.pop(dataset_id, None)
         if man is None:
             return
         touched_nodes = set()

@@ -349,6 +349,11 @@ class HoardFS:
             "capacity_bytes": capacity,
             "used_bytes": used,
             "free_bytes": capacity - used,
+            # live read-serving backlog across member nodes (contention-aware
+            # read scheduler): bytes queued on the read disks and NIC-tx
+            "read_queue_bytes": float(
+                sum(self.cache.store.read_load_bytes(n.node_id) for n in nodes)
+            ),
             "open_handles": len(self._handles),
             "membership_epoch": rb.epoch.value if rb is not None else 0,
             "members": sorted(rb.members) if rb is not None else [n.node_id for n in nodes],

@@ -242,6 +242,96 @@ def test_seek_breaks_readahead_prediction():
     fs.close(fd)
 
 
+def test_lseek_seek_end_and_negative_offset_rejected():
+    """POSIX seek edges: SEEK_END resolves against the file size, positions
+    past EOF are legal (reads there return 0 bytes), negative resolved
+    positions and unknown whence values are rejected."""
+    clock, topo, store, cache = _cluster()
+    cache.admit("ds", topo.nodes[:4])
+    cache.mark_filled("ds")
+    fs = _fs(clock, topo, store, cache)
+    fd = fs.open("/hoard/ds/shard-000000.bin")
+    size = IPC * IB
+    assert fs.lseek(fd, 0, 2) == size                       # SEEK_END
+    assert fs.lseek(fd, -10, 2) == size - 10
+    res = fs.read(fd, 100)                                  # EOF-clamps to 10
+    clock.run()
+    assert res.nbytes == 10
+    assert fs.read(fd, 100).nbytes == 0                     # now at EOF
+    assert fs.lseek(fd, 5, 2) == size + 5                   # past EOF: legal
+    assert fs.read(fd, 1).nbytes == 0
+    with pytest.raises(OSError):
+        fs.lseek(fd, -(size + 1), 2)                        # resolves negative
+    with pytest.raises(OSError):
+        fs.lseek(fd, -1, 0)
+    with pytest.raises(ValueError):
+        fs.lseek(fd, 0, 7)                                  # unknown whence
+    fs.close(fd)
+
+
+def test_pread_straddles_final_partial_chunk(tmp_path):
+    """EOF edge: 1000 items over 64-item chunks leaves a 40-item tail chunk.
+    A single whole-dataset shard must report the clamped size, and preads
+    straddling into — and clamped inside — the partial chunk must deliver
+    exactly the right bytes."""
+    clock, topo, store, cache = _cluster(root=str(tmp_path))
+    cache.register(DatasetSpec("odd", "nfs://store/odd", 1000, IB))
+    payloads = {c: bytes([33 + c]) * (IPC * IB) for c in range(16)}
+    cache.admit("odd", topo.nodes[:4], materialize=True, payload=lambda c: payloads[c])
+    cache.mark_filled("odd")
+    fs = _fs(clock, topo, store, cache)
+    fs.meta.set_items_per_file("odd", 1000)        # one shard spanning all chunks
+    attr = fs.stat("/hoard/odd/shard-000000.bin")
+    assert attr.size == 1000 * IB                  # tail chunk clamped, not padded
+    fd = fs.open("/hoard/odd/shard-000000.bin")
+    # straddle: the last 2 items of full chunk 14 + 4 items of the 40-item tail
+    res = fs.pread(fd, 6 * IB, (15 * IPC - 2) * IB)
+    clock.run()
+    assert res.nbytes == 6 * IB
+    assert res.data == payloads[14][-2 * IB:] + payloads[15][: 4 * IB]
+    # clamp across EOF inside the partial chunk
+    tail = fs.pread(fd, 10 * IB, (1000 - 3) * IB)
+    clock.run()
+    assert tail.nbytes == 3 * IB
+    tail_items = 1000 - 15 * IPC                   # 40 items in the last chunk
+    assert tail.data == payloads[15][(tail_items - 3) * IB : tail_items * IB]
+    assert fs.pread(fd, 5, 1000 * IB).nbytes == 0  # exactly at EOF
+    fs.close(fd)
+
+
+def test_readahead_window_resets_after_backward_seek():
+    """A backward seek drops the running prediction; resuming a sequential
+    streak afterwards starts a *fresh* window instead of continuing (or
+    double-counting) the stale one."""
+    clock, topo, store, cache = _cluster()
+    cache.admit("ds", topo.nodes[:4], on_demand=True)
+    fs = _fs(clock, topo, store, cache)
+    fs.meta.set_items_per_file("ds", 8 * IPC)       # 8 chunks per shard
+    fd = fs.open("/hoard/ds/shard-000000.bin")
+    h = fs._handles[fd]
+
+    def run():
+        yield fs.read(fd, IPC * IB).event           # streak building...
+        yield fs.read(fd, IPC * IB).event           # ...confirmed: window starts
+        first = h.readahead.scheduler
+        assert first is not None
+        yield fs.pread(fd, IPC * IB, 0).event       # backward seek
+        assert h.readahead.scheduler is None        # window reset
+        assert first.stopped
+        fs.lseek(fd, IPC * IB, 0)                   # sequential again
+        yield fs.read(fd, IPC * IB).event
+        yield fs.read(fd, IPC * IB).event
+        assert h.readahead.scheduler is not None
+        assert h.readahead.scheduler is not first   # a fresh window, not reuse
+
+    clock.process(run())
+    clock.run()
+    st = fs.readahead_stats()
+    assert st["seeks"] == 1
+    assert st["windows_started"] == 2
+    fs.close(fd)
+
+
 def test_pread_materialized_returns_real_bytes(tmp_path):
     """Byte-range reads deliver the exact payload (cross-item, mid-item and
     EOF-clamped ranges), CRC-verified through the stripe store."""

@@ -71,6 +71,82 @@ def test_corruption_repaired_from_replica(topo, tmp_path):
     assert len(blob) == man.chunk_bytes
 
 
+def test_corrupt_replica_rewritten_on_fallback(topo, tmp_path):
+    """Satellite regression: falling back to a healthy copy used to leave
+    the corrupt replica in place, so every subsequent nearby reader re-read
+    and re-CRCed the bad copy.  The fallback must heal it in place."""
+    store = _mk_store(topo, tmp_path)
+    man = store.create("ds", n_items=8, item_bytes=64, nodes=topo.nodes[:4],
+                       items_per_chunk=2, replication=2, materialize=True)
+    victim = man.chunk_nodes[0][0]
+    path = store._chunk_path("ds", victim, 0)
+    with open(path, "wb") as fh:
+        fh.write(b"garbage")
+    blob = store.read_chunk_verified("ds", 0, topo.nodes[victim])
+    assert len(blob) == man.chunk_bytes
+    assert store.corruption_repairs == 1
+    # the corrupt copy was rewritten from the healthy one: a direct read of
+    # the victim replica now CRC-verifies
+    assert store._read_chunk(man, victim, 0) == blob
+    # and a second verified read needs no further repair
+    store.read_chunk_verified("ds", 0, topo.nodes[victim])
+    assert store.corruption_repairs == 1
+
+
+def test_read_item_falls_back_and_heals_corrupt_replica(topo, tmp_path):
+    """The product read path (HoardFS.pread ends here) must survive a
+    corrupt chosen replica: fall through to a healthy copy and heal the bad
+    one in place instead of hard-failing the read."""
+    store = _mk_store(topo, tmp_path)
+    man = store.create("ds", n_items=8, item_bytes=64, nodes=topo.nodes[:4],
+                       items_per_chunk=2, replication=2, materialize=True)
+    reader = topo.nodes[0]
+    victim = store.locate("ds", 0, reader).node_id   # what this read resolves to
+    with open(store._chunk_path("ds", victim, 0), "wb") as fh:
+        fh.write(b"garbage")
+    raw = store.read_item("ds", 0, reader)           # must not raise
+    assert len(raw) == 64
+    assert store.corruption_repairs == 1
+    assert len(store._read_chunk(man, victim, 0)) == man.chunk_bytes  # healed
+
+
+def test_read_item_heals_corrupt_replica_sorting_after_healthy_one(topo, tmp_path):
+    """Regression: a corrupt replica that sorts AFTER the first healthy one
+    in distance order must still heal when read_item passes it as the
+    known-bad skip_replica — the heal loop only rewrites replicas collected
+    before the healthy read, so it has to be seeded up front."""
+    store = _mk_store(topo, tmp_path)
+    man = store.create("ds", n_items=64, item_bytes=64, nodes=topo.nodes[:4],
+                       items_per_chunk=2, replication=2, materialize=True)
+    reader = topo.nodes[4]                    # other rack: every pick is a tie
+    for item in range(64):                    # find a hash that picks slot 1 —
+        chunk = item // 2                     # the replica a stable distance
+        reps = man.chunk_nodes[chunk]         # sort visits last
+        if store.locate("ds", item, reader).node_id == reps[1]:
+            break
+    else:
+        pytest.fail("tie-break never picked slot 1 across 32 chunks")
+    victim = reps[1]
+    with open(store._chunk_path("ds", victim, chunk), "wb") as fh:
+        fh.write(b"bad")
+    raw = store.read_item("ds", item, reader)
+    assert len(raw) == 64
+    assert store.corruption_repairs == 1
+    assert len(store._read_chunk(man, victim, chunk)) == man.chunk_bytes  # healed
+
+
+def test_missing_replica_restored_on_fallback(topo, tmp_path):
+    """A replica whose file vanished is re-placed from the healthy copy."""
+    store = _mk_store(topo, tmp_path)
+    man = store.create("ds", n_items=8, item_bytes=64, nodes=topo.nodes[:4],
+                       items_per_chunk=2, replication=2, materialize=True)
+    victim = man.chunk_nodes[0][0]
+    os.remove(store._chunk_path("ds", victim, 0))
+    blob = store.read_chunk_verified("ds", 0, topo.nodes[victim])
+    assert store.corruption_repairs == 1
+    assert store._read_chunk(man, victim, 0) == blob
+
+
 def test_all_replicas_corrupt_raises(topo, tmp_path):
     store = _mk_store(topo, tmp_path)
     man = store.create("ds", n_items=4, item_bytes=64, nodes=topo.nodes[:2],
