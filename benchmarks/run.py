@@ -92,6 +92,7 @@ def main() -> None:
     from .multitenant import multitenant_rows
     from .rebalance import rebalance_rows
     from .roofline_table import roofline_rows
+    from .writeburst import writeburst_rows
 
     benches = [
         ("table1", paper_tables.table1_backends),
@@ -109,13 +110,14 @@ def main() -> None:
         ("ingest", ingest_rows),
         ("fsbench", fsbench_rows),
         ("rebalance", rebalance_rows),
+        ("writeburst", writeburst_rows),
     ]
     if args.quick:
         benches = [
             b for b in benches
             if b[0] in (
                 "table3", "table5", "headline", "roofline", "ingest",
-                "fsbench", "rebalance",
+                "fsbench", "rebalance", "writeburst",
             )
         ]
     if args.only:

@@ -60,10 +60,17 @@ from .workload import (
     WorkloadResult,
     stable_seed,
 )
+from .writeplane import (
+    WRITE_BACK,
+    WRITE_POLICIES,
+    WRITE_THROUGH,
+    ChunkCodec,
+    WritePlane,
+)
 
 __all__ = [
     "AllOf", "CacheEntry", "CacheEvent", "CacheFullError", "CacheManager",
-    "CacheState", "ChunkCorruption", "ChunkMove", "ClusterMetrics",
+    "CacheState", "ChunkCodec", "ChunkCorruption", "ChunkMove", "ClusterMetrics",
     "ClusterScheduler", "DatasetSpec", "Event", "EvictionPolicy", "FillTracker",
     "HoardBackend", "HoardLoader", "JobMetrics", "JobRecord", "JobResult",
     "JobSpec", "LRUCache", "LRUStackModel", "LocalCopyBackend",
@@ -72,7 +79,8 @@ __all__ = [
     "RebalanceError",
     "RebalancePlan", "Rebalancer", "RemoteBackend", "Resource", "ScenarioResult",
     "SimClock", "StripeDataPlane", "StripeError", "StripeManifest", "StripeStore",
-    "Topology", "TopologyConfig", "TrainingJob", "WorkloadCalibration",
-    "WorkloadJob", "WorkloadResult", "buffer_cache_items", "build_cluster",
-    "run_scenario", "stable_seed",
+    "Topology", "TopologyConfig", "TrainingJob", "WRITE_BACK", "WRITE_POLICIES",
+    "WRITE_THROUGH", "WorkloadCalibration",
+    "WorkloadJob", "WorkloadResult", "WritePlane", "buffer_cache_items",
+    "build_cluster", "run_scenario", "stable_seed",
 ]

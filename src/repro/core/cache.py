@@ -135,8 +135,18 @@ class CacheManager:
         return entry
 
     def free_bytes(self, nodes: Sequence[Node]) -> float:
+        """Admittable capacity: raw free space minus un-fsync'd write buffers.
+
+        Write buffers (``StripeStore.write_buffer_bytes``) occupy NVMe
+        *outside* ``bytes_on_node`` — the committed chunk copy is what
+        ``node_usage`` charges — so ignoring them would let admission
+        oversubscribe a node mid-checkpoint (the ISSUE 6 satellite fix).
+        """
         return sum(
-            self.capacity_per_node - self.store.bytes_on_node(n.node_id) for n in nodes
+            self.capacity_per_node
+            - self.store.bytes_on_node(n.node_id)
+            - self.store.write_buffer_bytes(n.node_id)
+            for n in nodes
         )
 
     def bytes_needed(self, dataset_id: str, *, items_per_chunk: Optional[int] = None) -> float:
@@ -375,6 +385,19 @@ class CacheManager:
                 "fill_progress": self.fill_progress(e.spec.dataset_id),
                 "admissions": e.admissions,
                 "migrating_chunks": self.store.migrating_chunks(e.spec.dataset_id),
+                # write-path state: unflushed write-back debt + un-fsync'd
+                # buffers; both make the dataset eviction-immune (data loss)
+                "dirty_chunks": (
+                    len(self.store.dirty_chunks(e.spec.dataset_id))
+                    if e.spec.dataset_id in self.store.manifests
+                    else 0
+                ),
+                "dirty_bytes": (
+                    self.store.dataset_dirty_bytes(e.spec.dataset_id)
+                    if e.spec.dataset_id in self.store.manifests
+                    else 0
+                ),
+                "pending_write_bytes": self.store.pending_write_bytes(e.spec.dataset_id),
                 "membership_epoch": (
                     self.store.manifests[e.spec.dataset_id].membership_epoch
                     if e.spec.dataset_id in self.store.manifests
@@ -397,7 +420,23 @@ class CacheManager:
             and e.active_readers == 0
             and e.spec.dataset_id != exclude
             and (node_ids is None or node_ids.intersection(e.nodes))
+            and not self._holds_unflushed_writes(e.spec.dataset_id)
         ]
+
+    def _holds_unflushed_writes(self, dataset_id: str) -> bool:
+        """True when evicting the dataset would lose written data.
+
+        Dirty chunks (committed, not yet flushed to remote) and un-fsync'd
+        write buffers both exist only in the cache tier — the read path's
+        datasets can always re-stream from remote, written ones cannot until
+        the flusher drains them.
+        """
+        if dataset_id not in self.store.manifests:
+            return False
+        return bool(
+            self.store.dirty_chunks(dataset_id)
+            or self.store.pending_write_bytes(dataset_id)
+        )
 
     def _lru_victim(
         self, exclude: Optional[str] = None, nodes: Optional[Sequence[Node]] = None
@@ -435,6 +474,13 @@ class CacheManager:
         if entry.active_readers > 0:
             raise ValueError(
                 f"dataset {dataset_id!r} has {entry.active_readers} active readers"
+            )
+        if self._holds_unflushed_writes(dataset_id):
+            raise ValueError(
+                f"dataset {dataset_id!r} holds unflushed writes "
+                f"({len(self.store.dirty_chunks(dataset_id))} dirty chunks, "
+                f"{self.store.pending_write_bytes(dataset_id)} buffered bytes); "
+                f"flush (WritePlane.drain) before evicting"
             )
         entry.state = CacheState.EVICTING
         if entry.fill_plane is not None:

@@ -73,6 +73,15 @@ class WorkloadCalibration:
     fill_bw: float = 85.6 * MB                 # AFM fill (miss) path service
     ram_bw: float = 8 * GB                     # buffer-cache / pagepool hit service
     nvme_prestage_s: float = 83.5              # paper-idealised staging time
+    # ---- write path (FanStore-style chunk compression, ISSUE 6) -----------
+    # FanStore (Zhang et al. 2018) reports ~2.3:1 lossless compression on DL
+    # training corpora; 0.43 wire-bytes per payload byte reproduces that.
+    # CPU service rates are per-core zlib-class figures: compression binds
+    # (~600 MB/s), decompression does not (~1.8 GB/s), which is why FanStore
+    # compresses on the write path but never throttles reads.
+    compress_ratio: float = 0.43               # wire/remote bytes per cached byte
+    compress_bw: float = 600 * MB              # per-writer CPU compress service
+    decompress_bw: float = 1800 * MB           # CPU decompress service (reads)
     # ---- memory model ------------------------------------------------------
     default_mdr: float = 0.5                   # paper fixes MDR=0.5 (Section 4.2)
 

@@ -98,11 +98,16 @@ class PlacementEngine:
         anchor_pods = {n.pod_id for n in near} if near else set()
 
         def key(n: Node):
+            # write-path pressure counts too (ISSUE 6): dirty chunks will
+            # cross the node's disks/NIC when the flusher drains them, and
+            # un-fsync'd buffers are NVMe occupancy node_usage cannot see
             return (
                 0 if n.rack_id in anchor_racks else (1 if n.pod_id in anchor_pods else 2),
                 self.cache.store.pending_fill_bytes(n.node_id)
                 + self.cache.store.migration_in_bytes(n.node_id)
-                + self.cache.store.read_load_bytes(n.node_id),
+                + self.cache.store.read_load_bytes(n.node_id)
+                + self.cache.store.dirty_bytes(n.node_id)
+                + self.cache.store.write_buffer_bytes(n.node_id),
                 self.cache.store.bytes_on_node(n.node_id),
                 n.node_id,
             )
@@ -113,7 +118,11 @@ class PlacementEngine:
             n for n in self.topology.nodes if members is None or n.node_id in members
         ]
         for n in sorted(candidates, key=key):
-            free = self.cache.capacity_per_node - self.cache.store.bytes_on_node(n.node_id)
+            free = (
+                self.cache.capacity_per_node
+                - self.cache.store.bytes_on_node(n.node_id)
+                - self.cache.store.write_buffer_bytes(n.node_id)
+            )
             if free <= 0:
                 continue
             picked.append(n)
@@ -164,6 +173,8 @@ class PlacementEngine:
                 self.cache.store.pending_fill_bytes(n.node_id)
                 + self.cache.store.migration_in_bytes(n.node_id)
                 + self.cache.store.read_load_bytes(n.node_id)
+                + self.cache.store.dirty_bytes(n.node_id)
+                + self.cache.store.write_buffer_bytes(n.node_id)
             )
             if not cached_nodes:
                 return (3, ingest, n.node_id)

@@ -42,8 +42,12 @@ class StripeError(RuntimeError):
 # the explicit version field so HoardFS metadata can evolve safely.  v3 adds
 # ``membership_epoch``, the monotonic cluster-view generation stamped by the
 # elastic rebalancer (:mod:`repro.core.rebalance`); v1/v2 blobs load as
-# epoch 0 (the pre-elastic world had exactly one membership view).
-MANIFEST_SCHEMA_VERSION = 3
+# epoch 0 (the pre-elastic world had exactly one membership view).  v4 adds
+# ``chunk_dirty``, the write-back mask for the bidirectional data plane: a
+# dirty chunk holds committed (fsync'd) writes that have not yet been flushed
+# to the remote store; pre-write-path blobs load with an empty (all-clean)
+# mask.
+MANIFEST_SCHEMA_VERSION = 4
 
 
 class ChunkCorruption(StripeError):
@@ -68,9 +72,19 @@ class StripeManifest:
     # this dataset's membership changes (add/remove/fail); readers use it to
     # detect that placements moved under them
     membership_epoch: int = 0
+    # write-back state (schema v4): chunk holds committed writes not yet
+    # flushed to remote; empty list (pre-write-path manifests) = all clean
+    chunk_dirty: list[bool] = field(default_factory=list)
 
     def is_filled(self, chunk: int) -> bool:
         return not self.chunk_filled or self.chunk_filled[chunk]
+
+    def is_dirty(self, chunk: int) -> bool:
+        return bool(self.chunk_dirty) and self.chunk_dirty[chunk]
+
+    @property
+    def n_dirty(self) -> int:
+        return int(sum(self.chunk_dirty)) if self.chunk_dirty else 0
 
     @property
     def n_filled(self) -> int:
@@ -111,7 +125,40 @@ class StripeManifest:
             # pre-elastic manifests were written under the one-and-only
             # membership view; epoch 0 by definition
             d.setdefault("membership_epoch", 0)
+        if version < 4:
+            # the write path did not exist: nothing can be dirty
+            d.setdefault("chunk_dirty", [])
         return cls(**d)
+
+
+@dataclass
+class _PendingWrite:
+    """Un-fsync'd write buffer for one chunk, owned by one writer node.
+
+    The overlay lives on the writer's NVMe (charged via
+    ``write_buffer_bytes``) until ``commit_writes`` replicates + applies it
+    atomically, or the writer fails and the whole buffer vanishes — a torn
+    write is never partially visible (crash-consistency contract).
+    """
+
+    writer: int
+    segs: list = field(default_factory=list)     # merged (lo, hi) intervals
+    nbytes: int = 0                              # total covered bytes
+    data: Optional[bytearray] = None             # full chunk image (materialized)
+
+    def add(self, lo: int, hi: int) -> int:
+        """Merge ``[lo, hi)`` into the covered set; return newly covered bytes."""
+        segs = sorted(self.segs + [(lo, hi)])
+        merged: list[tuple[int, int]] = []
+        for s_lo, s_hi in segs:
+            if merged and s_lo <= merged[-1][1]:
+                merged[-1] = (merged[-1][0], max(merged[-1][1], s_hi))
+            else:
+                merged.append((s_lo, s_hi))
+        total = sum(h - l for l, h in merged)
+        delta = total - self.nbytes
+        self.segs, self.nbytes = merged, total
+        return delta
 
 
 class StripeStore:
@@ -148,6 +195,20 @@ class StripeStore:
         self._migrating: dict[tuple[str, int], tuple[Optional[int], int, str]] = {}
         self._migration_in: dict[int, int] = {n.node_id: 0 for n in topology.nodes}
         self._migration_out: dict[int, int] = {n.node_id: 0 for n in topology.nodes}
+        # ---- write plane (bidirectional data plane) ----
+        # un-fsync'd write buffers: (dataset, chunk) -> overlay owned by one
+        # writer node; invisible to durability until commit_writes
+        self._pending_writes: dict[tuple[str, int], _PendingWrite] = {}
+        # O(1) per-node bytes of un-fsync'd buffers on the writer's NVMe
+        # (extra bytes beyond node_usage — placement/admission must see them)
+        self._write_buffer: dict[int, int] = {n.node_id: 0 for n in topology.nodes}
+        # O(1) per-node bytes of committed-but-unflushed (dirty) chunk
+        # replicas; each replica copy counts chunk_bytes
+        self._dirty: dict[int, int] = {n.node_id: 0 for n in topology.nodes}
+        # modeled remote object store: flushed chunk blobs survive eviction
+        # (delete keeps this map), so an overwrite->evict->refetch round-trip
+        # returns the written bytes, not the synthetic default payload
+        self._remote: dict[tuple[str, int], bytes] = {}
 
     # ----------------------------------------------------------------- create
     def create(
@@ -194,7 +255,9 @@ class StripeStore:
             man.chunk_nodes.append(replicas)
             man.chunk_filled.append(bool(prefill))
             if materialize and prefill:
-                blob = payload(c) if payload else self._default_payload(man, c)
+                # remote_payload, not _default_payload: a re-admission after
+                # flushed overwrites must deliver what the remote store holds
+                blob = payload(c) if payload else self.remote_payload(man, c)
                 crc = zlib.crc32(blob)
                 man.chunk_crc.append(crc)
                 for node_id in replicas:
@@ -215,8 +278,23 @@ class StripeStore:
         return man
 
     def _default_payload(self, man: StripeManifest, chunk: int) -> bytes:
-        rng = np.random.default_rng(hash((man.dataset_id, chunk)) % (2**32))
+        # CRC32, not hash(): payload bytes must not vary with PYTHONHASHSEED
+        # (the crash-consistency suite fingerprints content across fresh
+        # interpreters; hash() is randomized per process)
+        seed = zlib.crc32(f"{man.dataset_id}:{chunk}".encode())
+        rng = np.random.default_rng(seed)
         return rng.bytes(man.chunk_bytes)
+
+    def remote_payload(self, man: StripeManifest, chunk: int) -> bytes:
+        """Chunk content as the remote store would serve it.
+
+        A chunk that was flushed (write-back/write-through) serves the
+        flushed blob; anything never written serves the deterministic
+        synthetic payload.  Refetch and on-demand re-fill both resolve
+        through here, so written bytes survive eviction round-trips.
+        """
+        blob = self._remote.get((man.dataset_id, chunk))
+        return blob if blob is not None else self._default_payload(man, chunk)
 
     def _chunk_path(self, dataset_id: str, node_id: int, chunk: int) -> str:
         if not self.root:
@@ -241,7 +319,7 @@ class StripeStore:
         if man.is_filled(chunk):
             return False
         if man.materialized:
-            blob = payload(chunk) if payload else self._default_payload(man, chunk)
+            blob = payload(chunk) if payload else self.remote_payload(man, chunk)
             man.chunk_crc[chunk] = zlib.crc32(blob)
             for node_id in man.chunk_nodes[chunk]:
                 path = self._chunk_path(dataset_id, node_id, chunk)
@@ -280,6 +358,197 @@ class StripeStore:
         fail_node/delete, never a manifest scan.
         """
         return self._pending_fill[node_id]
+
+    # ------------------------------------------------------------ write plane
+    # Bidirectional data plane (ISSUE 6).  Writes move through three states:
+    #
+    #   buffered  — ``write_pending`` stages bytes in a per-(dataset, chunk)
+    #               overlay on the *writer's* NVMe.  Readers see them
+    #               (read-your-writes) but durability does not: a writer
+    #               failure discards whole overlays, never partial bytes.
+    #   committed — ``commit_writes`` (the fsync point) applies an overlay to
+    #               every replica atomically and marks the chunk *dirty*
+    #               under write-back: durable against any single node loss
+    #               (the flow layer guarantees >= 2 independent copies —
+    #               peer replicas or the remote store — before committing).
+    #   flushed   — ``mark_flushed`` clears the dirty bit once the chunk's
+    #               committed content lands in the remote store; the blob is
+    #               retained in ``_remote`` so refetch/re-fill round-trips
+    #               return written bytes.
+    #
+    # Timing (NVMe/NIC/uplink flows, policies, compression) lives in
+    # :mod:`repro.core.writeplane`; this layer is pure metadata + bytes.
+
+    def write_pending(
+        self, dataset_id: str, chunk: int, offset: int, data, writer: int
+    ) -> int:
+        """Stage bytes into a chunk's un-fsync'd overlay; returns newly
+        buffered bytes (0 when rewriting an already-buffered range).
+
+        ``data`` is ``bytes`` (materialized mode) or an ``int`` byte count
+        (accounting-only simulations).  One writer owns a chunk's overlay at
+        a time — checkpoint shards are per-node files, so concurrent writers
+        on one chunk indicate a layering bug, not a workload.
+        """
+        man = self.manifests[dataset_id]
+        nbytes = len(data) if isinstance(data, (bytes, bytearray, memoryview)) else int(data)
+        if nbytes <= 0:
+            return 0
+        if not man.is_filled(chunk):
+            raise StripeError(
+                f"{dataset_id} chunk {chunk} not filled; writable datasets must "
+                "be admitted prefilled"
+            )
+        if offset < 0 or offset + nbytes > man.chunk_bytes:
+            raise StripeError(f"write [{offset}, {offset + nbytes}) outside chunk")
+        key = (dataset_id, chunk)
+        p = self._pending_writes.get(key)
+        if p is None:
+            p = self._pending_writes[key] = _PendingWrite(writer=writer)
+        elif p.writer != writer:
+            raise StripeError(
+                f"{dataset_id}:{chunk} has a pending write from node {p.writer}; "
+                f"node {writer} cannot interleave"
+            )
+        if man.materialized and isinstance(data, (bytes, bytearray, memoryview)):
+            if p.data is None:
+                # seed the image from committed content so unwritten ranges
+                # read back exactly what durability would serve
+                p.data = bytearray(
+                    self.read_chunk_verified(dataset_id, chunk, self.topology.node(writer))
+                )
+            p.data[offset : offset + nbytes] = bytes(data)
+        delta = p.add(offset, offset + nbytes)
+        self._write_buffer[writer] += delta
+        return delta
+
+    def pending_chunks(self, dataset_id: str, writer: Optional[int] = None) -> list[int]:
+        """Chunk indices holding un-fsync'd overlays (optionally one writer's)."""
+        return sorted(
+            c
+            for (ds, c), p in self._pending_writes.items()
+            if ds == dataset_id and (writer is None or p.writer == writer)
+        )
+
+    def pending_write_bytes(self, dataset_id: str) -> int:
+        """Un-fsync'd buffered bytes for one dataset (CacheManager.ls)."""
+        return sum(
+            p.nbytes for (ds, _c), p in self._pending_writes.items() if ds == dataset_id
+        )
+
+    def write_buffer_bytes(self, node_id: int) -> int:
+        """Un-fsync'd overlay bytes buffered on a node's NVMe.
+
+        These sit *outside* ``node_usage`` (the committed chunk copy is
+        already charged), so admission control and placement scoring must
+        add them explicitly or a node whose NVMe holds write buffers looks
+        emptier than it is.  O(1) incremental counter.
+        """
+        return self._write_buffer[node_id]
+
+    def commit_writes(
+        self, dataset_id: str, chunks: Sequence[int], writer: int
+    ) -> list[int]:
+        """Atomically apply a writer's overlays to every replica (the fsync
+        commit point); returns the chunk indices actually committed.
+
+        All listed chunks commit in one metadata step — an fsync is
+        all-or-nothing even when the write straddled chunk boundaries,
+        matching :mod:`repro.train.checkpoint`'s atomic-rename contract.
+        Overlays discarded by an earlier writer failure simply no longer
+        exist, so a commit callback racing a crash commits nothing.
+        """
+        man = self.manifests.get(dataset_id)
+        if man is None:
+            return []
+        committed: list[int] = []
+        for chunk in chunks:
+            key = (dataset_id, int(chunk))
+            p = self._pending_writes.get(key)
+            if p is None or p.writer != writer:
+                continue
+            replicas = man.chunk_nodes[key[1]]
+            if not replicas:
+                continue                         # wholly lost mid-fsync: keep buffering
+            if man.materialized and p.data is not None:
+                blob = bytes(p.data)
+                man.chunk_crc[key[1]] = zlib.crc32(blob)
+                for node_id in replicas:
+                    path = self._chunk_path(dataset_id, node_id, key[1])
+                    os.makedirs(os.path.dirname(path), exist_ok=True)
+                    with open(path, "wb") as fh:
+                        fh.write(blob)
+            if not man.chunk_dirty:
+                man.chunk_dirty = [False] * man.n_chunks
+            if not man.chunk_dirty[key[1]]:
+                man.chunk_dirty[key[1]] = True
+                for node_id in replicas:
+                    self._dirty[node_id] += man.chunk_bytes
+            del self._pending_writes[key]
+            self._write_buffer[writer] -= p.nbytes
+            committed.append(key[1])
+        return committed
+
+    def discard_pending(
+        self, dataset_id: Optional[str] = None, writer: Optional[int] = None
+    ) -> int:
+        """Drop un-fsync'd overlays (crash semantics / eviction cleanup).
+
+        Whole overlays vanish — never a byte range — so a torn write is
+        all-invisible after the writer fails.  Returns overlays discarded.
+        """
+        doomed = [
+            key
+            for key, p in self._pending_writes.items()
+            if (dataset_id is None or key[0] == dataset_id)
+            and (writer is None or p.writer == writer)
+        ]
+        for key in doomed:
+            p = self._pending_writes.pop(key)
+            self._write_buffer[p.writer] -= p.nbytes
+        return len(doomed)
+
+    def mark_flushed(self, dataset_id: str, chunk: int) -> bool:
+        """Clear a chunk's dirty bit after its bytes land in the remote store.
+
+        Retains the flushed blob in the modeled remote store (materialized
+        mode) so a later eviction + refetch serves the written content.
+        Returns ``True`` only on the dirty->clean transition.
+        """
+        man = self.manifests[dataset_id]
+        if not man.is_dirty(chunk):
+            return False
+        if man.materialized and man.chunk_nodes[chunk]:
+            reader = self.topology.node(man.chunk_nodes[chunk][0])
+            self._remote[(dataset_id, chunk)] = self.read_chunk_verified(
+                dataset_id, chunk, reader
+            )
+        man.chunk_dirty[chunk] = False
+        for node_id in man.chunk_nodes[chunk]:
+            self._dirty[node_id] -= man.chunk_bytes
+        return True
+
+    def dirty_chunks(self, dataset_id: str) -> list[int]:
+        """Committed-but-unflushed chunk indices, ascending (flush order)."""
+        man = self.manifests[dataset_id]
+        if not man.chunk_dirty:
+            return []
+        return [c for c, d in enumerate(man.chunk_dirty) if d]
+
+    def dataset_dirty_bytes(self, dataset_id: str) -> int:
+        """Logical unflushed bytes of one dataset (one copy, not x replicas)."""
+        man = self.manifests[dataset_id]
+        return man.n_dirty * man.chunk_bytes
+
+    def dirty_bytes(self, node_id: int) -> int:
+        """Bytes of dirty (unflushed write-back) chunk replicas on a node.
+
+        Counterpart of :meth:`pending_fill_bytes` for the write path: these
+        bytes will cross the node's read disks, NIC-tx and the shared uplink
+        when the flusher drains them, so placement scoring treats them as
+        pressure.  O(1) incremental counter.
+        """
+        return self._dirty[node_id]
 
     # -------------------------------------------------------- elastic moves
     # The rebalancer's two-phase chunk-transfer protocol.  ``begin_transfer``
@@ -392,8 +661,14 @@ class StripeStore:
             replicas.append(dst)
             if man.chunk_filled:
                 man.chunk_filled[chunk] = True
+            # a refetched chunk carries the *remote* content by definition:
+            # clean with respect to the remote store, whatever its old mask
+            # said before the loss (dirty accounting for the lost replicas
+            # was already released in fail_node)
+            if man.chunk_dirty:
+                man.chunk_dirty[chunk] = False
             if man.materialized:
-                blob = self._default_payload(man, chunk)
+                blob = self.remote_payload(man, chunk)
                 man.chunk_crc[chunk] = zlib.crc32(blob)
                 path = self._chunk_path(dataset_id, dst, chunk)
                 os.makedirs(os.path.dirname(path), exist_ok=True)
@@ -409,12 +684,17 @@ class StripeStore:
         if kind == "move":
             replicas[replicas.index(src)] = dst
             self.node_usage[src] -= cb
+            if man.is_dirty(chunk):              # dirty debt moves with the copy
+                self._dirty[src] -= cb
+                self._dirty[dst] += cb
             if man.materialized:
                 old = self._chunk_path(dataset_id, src, chunk)
                 if os.path.exists(old):
                     os.remove(old)
         else:                                    # repair: dst joins the set
             replicas.append(dst)
+            if man.is_dirty(chunk):
+                self._dirty[dst] += cb
         return True
 
     def abort_transfer(self, dataset_id: str, chunk: int) -> bool:
@@ -582,6 +862,13 @@ class StripeStore:
             raise StripeError(
                 f"{dataset_id} chunk {chunk} not filled yet (on-demand fill in progress)"
             )
+        pending = self._pending_writes.get((dataset_id, chunk))
+        if pending is not None and pending.data is not None:
+            # read-your-writes: the un-fsync'd overlay is the freshest image
+            # (committed content + buffered writes applied); no CRC — the
+            # checksum describes committed bytes only
+            off = (item - chunk * man.items_per_chunk) * man.item_bytes
+            return bytes(pending.data[off : off + man.item_bytes])
         src = self.locate(dataset_id, item, reader)
         try:
             blob = self._read_chunk(man, src.node_id, chunk)
@@ -661,12 +948,21 @@ class StripeStore:
 
     # ---------------------------------------------------------- node failure
     def fail_node(self, node_id: int) -> None:
-        """Drop a node's chunks (simulated node loss)."""
+        """Drop a node's chunks (simulated node loss).
+
+        Crash-consistency contract: every un-fsync'd overlay *owned* by the
+        dead writer vanishes whole (torn writes are never partially
+        visible), while committed (fsync'd) data survives on the chunk's
+        other replicas or, once flushed, in the remote store.  In-flight
+        fsyncs whose writer died commit nothing — ``commit_writes`` finds
+        the overlays gone and no-ops.
+        """
         self._replica_mat.clear()                    # placements change below
         # in-flight transfers sourced from or targeting the dead node can
         # never complete; release their reservations so capacity accounting
         # stays exact (the rebalancer re-plans from the post-failure state)
         self._abort_transfers_touching(node_id)
+        self.discard_pending(writer=node_id)
         for man in self.manifests.values():
             for c, replicas in enumerate(man.chunk_nodes):
                 if node_id in replicas:
@@ -674,6 +970,8 @@ class StripeStore:
                     self.node_usage[node_id] -= man.chunk_bytes
                     if not man.is_filled(c):
                         self._pending_fill[node_id] -= man.chunk_bytes
+                    if man.is_dirty(c):
+                        self._dirty[node_id] -= man.chunk_bytes
                     if man.materialized:
                         path = self._chunk_path(man.dataset_id, node_id, c)
                         if os.path.exists(path):
@@ -709,6 +1007,8 @@ class StripeStore:
                 self.node_usage[dst] += man.chunk_bytes
                 if not man.is_filled(c):
                     self._pending_fill[dst] += man.chunk_bytes
+                if man.is_dirty(c):
+                    self._dirty[dst] += man.chunk_bytes
                 created += 1
         return created
 
@@ -746,6 +1046,9 @@ class StripeStore:
             if not man.is_filled(c):
                 self._pending_fill[node_id] -= man.chunk_bytes
                 self._pending_fill[dst] += man.chunk_bytes
+            if man.is_dirty(c):
+                self._dirty[node_id] -= man.chunk_bytes
+                self._dirty[dst] += man.chunk_bytes
             moved += 1
         return moved
 
@@ -755,6 +1058,9 @@ class StripeStore:
         # so abort_transfer can release the dst reservations it charged)
         for ds, c in [k for k in self._migrating if k[0] == dataset_id]:
             self.abort_transfer(ds, c)
+        # un-fsync'd overlays die with the cache copy; flushed blobs persist
+        # in the modeled remote store (that is the point of flushing)
+        self.discard_pending(dataset_id=dataset_id)
         man = self.manifests.pop(dataset_id, None)
         self._replica_mat.pop(dataset_id, None)
         if man is None:
@@ -765,6 +1071,8 @@ class StripeStore:
                 self.node_usage[node_id] -= man.chunk_bytes
                 if not man.is_filled(c):
                     self._pending_fill[node_id] -= man.chunk_bytes
+                if man.is_dirty(c):
+                    self._dirty[node_id] -= man.chunk_bytes
                 touched_nodes.add(node_id)
                 if man.materialized:
                     path = self._chunk_path(man.dataset_id, node_id, c)

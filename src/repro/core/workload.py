@@ -51,6 +51,7 @@ from .prefetch import FillTracker, PrefetchScheduler
 from .simclock import Event, SimClock
 from .stripestore import StripeStore
 from .topology import Node, Topology
+from .writeplane import WRITE_POLICIES, ChunkCodec, WritePlane
 
 BACKENDS = ("hoard", "posix", "rem", "nvme")
 FILL_MODES = ("afm", "ondemand", "prepopulated")
@@ -91,6 +92,13 @@ class WorkloadJob:
     # dataset; True/False overrides (run_scenario pins job0 as the driver)
     fill_driver: Optional[bool] = None
     cal: Optional[WorkloadCalibration] = None  # None -> derived from the dataset
+    # ---- checkpoint bursts (ISSUE 6): every compute node of the job
+    # periodically writes ckpt_bytes through the write plane and fsyncs,
+    # so checkpoint traffic contends with foreground ingest on the same
+    # disks/NICs/up-links.  0 disables.
+    ckpt_interval_s: float = 0.0
+    ckpt_bytes: float = 0.0
+    ckpt_policy: str = "writeback"       # "writeback" | "writethrough"
 
     def __post_init__(self):
         if self.backend not in BACKENDS:
@@ -102,6 +110,16 @@ class WorkloadJob:
             # backend; the filesystem's miss fall-through is the shared
             # chunk-granular fill plane (use "ondemand" or "prepopulated")
             raise ValueError('backend "posix" supports fill="ondemand"|"prepopulated"')
+        if self.ckpt_policy not in WRITE_POLICIES:
+            raise ValueError(f"unknown ckpt_policy {self.ckpt_policy!r} (want {WRITE_POLICIES})")
+        if self.ckpt_interval_s > 0:
+            if self.backend not in CACHED_BACKENDS:
+                raise ValueError(
+                    "checkpoint bursts write through the cache; "
+                    f'backend must be one of {CACHED_BACKENDS}, got {self.backend!r}'
+                )
+            if self.ckpt_bytes <= 0:
+                raise ValueError("ckpt_interval_s > 0 requires ckpt_bytes > 0")
 
 
 @dataclass
@@ -117,6 +135,7 @@ class JobRecord:
     admitted_cold: bool = False          # this job triggered the dataset admission
     dataset_state_at_start: Optional[str] = None  # hoard: cache state when job began
     result: Optional[JobResult] = None
+    ckpt_bursts: int = 0                 # completed checkpoint bursts (all nodes)
 
     @property
     def queued_s(self) -> float:
@@ -384,6 +403,17 @@ class ClusterScheduler:
             # clairvoyant: this job cold-admitted the dataset, so its epoch-0
             # permutation defines the fill's first-touch order (NoPFS)
             scheduler.start(loader.plan.order(0))
+        if spec.ckpt_interval_s > 0:
+            # checkpoint bursts from every compute node (ISSUE 6): each node
+            # gets its own WritePlane and a disjoint chunk lane; each burst
+            # proc holds its own reader pin until its dirty data has flushed
+            codec = ChunkCodec.from_calibration(cal)
+            for lane, wn in enumerate(nodes):
+                wp = WritePlane(
+                    clock, self.topology, self.cache, spec.dataset_id, wn,
+                    policy=spec.ckpt_policy, codec=codec, metrics=jm,
+                )
+                clock.process(self._ckpt_proc(spec, rec, wp, lane, len(nodes)))
         rec.result = yield job.start()
 
         # ---- phase 4: teardown — free GPUs + reader pin, wake queued jobs
@@ -395,6 +425,35 @@ class ClusterScheduler:
             self.cache.release(spec.dataset_id)
         rec.phase = "done"
         self._notify()
+
+    # ---------------------------------------------------- checkpoint bursts
+    def _ckpt_proc(self, spec: WorkloadJob, rec: JobRecord, wplane, lane: int, n_lanes: int):
+        """Periodic checkpoint bursts from one compute node of a running job.
+
+        Holds an extra reader pin for its whole lifetime: a dataset with
+        buffered or dirty checkpoint bytes must not become an eviction victim
+        (the CacheManager guard would refuse anyway, but the pin keeps the
+        engine's queued-cache retry loop from spinning on it).  On job exit
+        the proc drains the write-back flusher before unpinning, so the
+        dataset is evictable again only once every fsync'd byte reached the
+        remote store.
+        """
+        clock = self.clock
+        ds = spec.dataset_id
+        self.cache.acquire(ds)
+        try:
+            while rec.finished is None:
+                yield clock.sleep(spec.ckpt_interval_s)
+                if rec.finished is not None or ds not in self.store.manifests:
+                    break
+                if not self.cache.is_cached(ds):
+                    continue                   # no checkpoints into a mid-fill stripe
+                yield wplane.write_burst(spec.ckpt_bytes, lane=lane, n_lanes=n_lanes)
+                rec.ckpt_bursts += 1
+            yield wplane.drain()
+        finally:
+            self.cache.release(ds)
+            self._notify()
 
     def _release_nodes(self, rec: JobRecord) -> None:
         for node_id, gpus in rec.taken:

@@ -11,7 +11,10 @@ this package is that interface for the reproduction:
   ``readdir``/``close``/``statfs`` file handles whose reads resolve
   tri-state (stripe hit / fill join / remote fall-through) through the
   shared :class:`~repro.core.loader.StripeDataPlane`, taking CacheManager
-  reader pins for the lifetime of every handle.
+  reader pins for the lifetime of every handle.  Writable handles
+  (``open(path, "w")``) add ``write``/``pwrite``/``fsync``/``ftruncate``
+  over the :class:`~repro.core.writeplane.WritePlane` dirty-chunk
+  lifecycle — the bidirectional data plane (ISSUE 6).
 * :class:`Readahead`      — per-handle sequential windows feeding the
   existing :class:`~repro.core.prefetch.PrefetchScheduler` from *observed
   file offsets* (the non-clairvoyant mode the paper actually runs).
@@ -26,7 +29,7 @@ path and ``benchmarks/fsbench.py`` for the acceptance measurements.
 from .dataset import FileDataset, posix_loader
 from .metadata import FS_SCHEMA_VERSION, ROOT, FileAttr, MetadataService
 from .readahead import Readahead
-from .vfs import HoardFS, OpenFile, ReadResult
+from .vfs import HoardFS, OpenFile, ReadResult, WriteResult
 
 __all__ = [
     "FS_SCHEMA_VERSION",
@@ -38,5 +41,6 @@ __all__ = [
     "ROOT",
     "ReadResult",
     "Readahead",
+    "WriteResult",
     "posix_loader",
 ]

@@ -171,6 +171,37 @@ class MetadataService:
 
     # --------------------------------------------------- byte-range resolution
     @staticmethod
+    def chunk_segments(
+        attr: FileAttr, chunk_bytes: int, offset: int, size: int
+    ) -> list[tuple[int, int, int, int]]:
+        """Split a shard-file byte range into per-stripe-chunk segments.
+
+        The write path's dual of :meth:`items_for_range`: a ``pwrite`` may
+        straddle chunk boundaries (shard geometry is independent of chunk
+        geometry), and each segment lands in a different chunk's overlay.
+        Returns ``(chunk, chunk_offset, file_lo, seg_len)`` tuples where
+        ``file_lo`` is the segment's offset within the *caller's* buffer
+        coordinates (file offset space) — so ``data[file_lo - offset :
+        file_lo - offset + seg_len]`` is the segment payload.
+        """
+        if attr.is_dir:
+            raise IsADirectoryError(21, "is a directory", attr.path)
+        if offset < 0:
+            raise ValueError(f"negative offset {offset}")
+        end = offset + max(0, size)
+        segs: list[tuple[int, int, int, int]] = []
+        file_base = attr.item_lo * attr.item_bytes     # dataset byte offset of file[0]
+        pos = offset
+        while pos < end:
+            ds_off = file_base + pos
+            chunk = ds_off // chunk_bytes
+            chunk_off = ds_off % chunk_bytes
+            seg_len = min(end - pos, chunk_bytes - chunk_off)
+            segs.append((int(chunk), int(chunk_off), int(pos), int(seg_len)))
+            pos += seg_len
+        return segs
+
+    @staticmethod
     def items_for_range(attr: FileAttr, offset: int, size: int) -> np.ndarray:
         """Dataset item ids a byte range ``[offset, offset+size)`` touches."""
         if attr.is_dir:

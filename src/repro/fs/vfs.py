@@ -39,6 +39,7 @@ from ..core.prefetch import FillTracker
 from ..core.simclock import Event, SimClock
 from ..core.tiers import PagePool, buffer_cache_items
 from ..core.topology import Node, Topology
+from ..core.writeplane import WRITE_BACK, ChunkCodec, WritePlane
 from .metadata import ROOT, FileAttr, MetadataService
 from .readahead import Readahead
 
@@ -59,12 +60,25 @@ class ReadResult:
 
 
 @dataclass
+class WriteResult:
+    """Outcome of one ``write``/``pwrite``/``ftruncate``.
+
+    ``event`` fires when the bytes are buffered on the writer's NVMe (the
+    POSIX call "returns") — durability needs a subsequent :meth:`HoardFS.fsync`.
+    """
+
+    event: Event
+    nbytes: int
+
+
+@dataclass
 class OpenFile:
     fd: int
     attr: FileAttr
     plane: StripeDataPlane
     readahead: Readahead
     pos: int = 0
+    writable: bool = False
 
 
 @dataclass
@@ -103,6 +117,8 @@ class HoardFS:
         readahead_window: Optional[int] = 8,
         readahead_inflight: int = 4,
         readahead_min_streak: int = 2,
+        write_policy: str = WRITE_BACK,
+        write_codec: Optional[ChunkCodec] = None,
     ):
         self.clock = clock
         self.topology = topology
@@ -115,11 +131,15 @@ class HoardFS:
         self.readahead_window = readahead_window
         self.readahead_inflight = readahead_inflight
         self.readahead_min_streak = readahead_min_streak
+        self.write_policy = write_policy
+        self.write_codec = write_codec
         self._handles: dict[int, OpenFile] = {}
         self._next_fd = 3                     # 0/1/2 taken, as tradition demands
         # data plane per dataset, keyed by admission generation so a plane
         # never outlives an evict/re-admit cycle of its dataset
         self._planes: dict[str, tuple[int, StripeDataPlane]] = {}
+        # write plane per dataset, admission-keyed like the read planes
+        self._wplanes: dict[str, tuple[int, WritePlane]] = {}
         self._ra = _RAStats()
 
     # ------------------------------------------------------------- data plane
@@ -198,6 +218,18 @@ class HoardFS:
         self._planes[dataset_id] = (entry.admissions, plane)
         return plane
 
+    def _write_plane(self, dataset_id: str) -> WritePlane:
+        entry = self._entry(dataset_id)
+        got = self._wplanes.get(dataset_id)
+        if got is not None and got[0] == entry.admissions:
+            return got[1]
+        plane = WritePlane(
+            self.clock, self.topology, self.cache, dataset_id, self.node,
+            policy=self.write_policy, codec=self.write_codec, metrics=self.metrics,
+        )
+        self._wplanes[dataset_id] = (entry.admissions, plane)
+        return plane
+
     # ---------------------------------------------------------- POSIX surface
     def stat(self, path: str) -> FileAttr:
         return self.meta.stat(path)
@@ -205,8 +237,16 @@ class HoardFS:
     def readdir(self, path: str) -> list[str]:
         return self.meta.readdir(path)
 
-    def open(self, path: str) -> int:
-        """Open a shard file; takes a reader pin for the handle's lifetime."""
+    def open(self, path: str, flags: str = "r") -> int:
+        """Open a shard file; takes a reader pin for the handle's lifetime.
+
+        ``flags``: ``"r"`` (default) read-only, ``"w"``/``"rw"``/``"r+"``
+        writable.  Shard geometry is fixed by the stripe manifest, so a
+        writable open never creates or extends a file — it overwrites in
+        place, the checkpoint/ingest pattern the write path exists for.
+        """
+        if flags not in ("r", "w", "rw", "r+"):
+            raise ValueError(f"bad flags {flags!r} (want r, w, rw or r+)")
         attr = self.meta.lookup(path)
         if attr.is_dir:
             raise IsADirectoryError(21, "is a directory", path)
@@ -222,6 +262,7 @@ class HoardFS:
                 window_chunks=self.readahead_window,
                 max_inflight=self.readahead_inflight,
             ),
+            writable=flags != "r",
         )
         return fd
 
@@ -321,6 +362,98 @@ class HoardFS:
         self.cache.touch(dataset_id)
         return plane.ondemand_io(item_ids, epoch, positions)
 
+    # ------------------------------------------------------------ write surface
+    def _writable_handle(self, fd: int) -> OpenFile:
+        h = self._handle(fd)
+        if not h.writable:
+            raise OSError(9, "file descriptor opened read-only", h.attr.path)
+        return h
+
+    def write(self, fd: int, data) -> WriteResult:
+        """Sequential write at the handle offset (advances it)."""
+        h = self._writable_handle(fd)
+        res = self.pwrite(fd, data, h.pos)
+        h.pos += res.nbytes
+        return res
+
+    def pwrite(self, fd: int, data, offset: int) -> WriteResult:
+        """Positional write; handle offset unmoved (POSIX pwrite).
+
+        ``data`` is ``bytes`` (materialized stores get real read-your-writes
+        content) or an ``int`` byte count (accounting-only simulations).
+        Writes past EOF raise ``EFBIG`` — shard geometry is fixed by the
+        stripe manifest, the façade's documented divergence from growable
+        POSIX files.  The result's event fires when the bytes are buffered
+        on this mount's node; durability needs :meth:`fsync`.
+        """
+        h = self._writable_handle(fd)
+        attr = h.attr
+        nbytes = len(data) if isinstance(data, (bytes, bytearray, memoryview)) else int(data)
+        if nbytes < 0:
+            raise ValueError(f"negative write size {nbytes}")
+        if offset < 0:
+            raise OSError(22, "invalid write offset", attr.path)
+        if offset + nbytes > attr.size:
+            raise OSError(
+                27, "write past EOF: shard size is fixed by stripe geometry", attr.path
+            )
+        if nbytes == 0:
+            done = self.clock.event()
+            done.set()
+            return WriteResult(event=done, nbytes=0)
+        man = self.cache.store.manifests[attr.dataset_id]
+        wplane = self._write_plane(attr.dataset_id)
+        ranges = []
+        for chunk, chunk_off, file_lo, seg_len in self.meta.chunk_segments(
+            attr, man.chunk_bytes, offset, nbytes
+        ):
+            if isinstance(data, (bytes, bytearray, memoryview)):
+                seg = bytes(data[file_lo - offset : file_lo - offset + seg_len])
+            else:
+                seg = seg_len
+            ranges.append((chunk, chunk_off, seg))
+        self.cache.touch(attr.dataset_id)
+        return WriteResult(event=wplane.write(ranges), nbytes=nbytes)
+
+    def fsync(self, fd: int) -> Event:
+        """Commit this node's buffered writes to the dataset durably.
+
+        Fires with the committed chunk list once every touched chunk is
+        replicated (and, under write-through or replication < 2, flushed to
+        the remote store).  Commit is atomic across all chunks of the fsync
+        — a crash mid-fsync leaves either all of them or none of them
+        committed, mirroring ``CheckpointManager``'s atomic-rename contract.
+        """
+        h = self._writable_handle(fd)
+        return self._write_plane(h.attr.dataset_id).fsync()
+
+    # fdatasync carries no extra metadata in this façade; same barrier
+    fdatasync = fsync
+
+    def ftruncate(self, fd: int, length: int) -> WriteResult:
+        """Truncate-to-length as overwrite: zero-fill ``[length, size)``.
+
+        Shard geometry is fixed, so ``ftruncate`` cannot shrink or grow the
+        file's stat size; it implements POSIX's *visible* contract — bytes
+        past ``length`` read back as zeros — as a buffered zero write
+        (fsync to make it durable).  ``length > size`` raises ``EFBIG``.
+        """
+        h = self._writable_handle(fd)
+        if length < 0:
+            raise OSError(22, "negative length", h.attr.path)
+        if length > h.attr.size:
+            raise OSError(
+                27, "cannot extend: shard size is fixed by stripe geometry", h.attr.path
+            )
+        tail = h.attr.size - length
+        if tail == 0:
+            done = self.clock.event()
+            done.set()
+            return WriteResult(event=done, nbytes=0)
+        man = self.cache.store.manifests[h.attr.dataset_id]
+        data = b"\x00" * tail if man.materialized else tail
+        return self.pwrite(fd, data, length)
+
     # ------------------------------------------------------------- statistics
     def statfs(self) -> dict:
         """Filesystem-wide view: capacity + per-dataset cache state.
@@ -345,10 +478,21 @@ class HoardFS:
             nodes = self.topology.nodes
         capacity = self.cache.capacity_per_node * len(nodes)
         used = float(sum(self.cache.store.bytes_on_node(n.node_id) for n in nodes))
+        # write-path occupancy (satellite fix, ISSUE 6): un-fsync'd buffers
+        # sit OUTSIDE used_bytes (the committed copy is what node_usage
+        # charges), so free_bytes must subtract them or admission oversubscribes
+        # a node whose NVMe holds unflushed writes; dirty bytes are inside
+        # used_bytes but reported so operators can see unflushed write-back debt
+        write_buffer = float(
+            sum(self.cache.store.write_buffer_bytes(n.node_id) for n in nodes)
+        )
+        dirty = float(sum(self.cache.store.dirty_bytes(n.node_id) for n in nodes))
         return {
             "capacity_bytes": capacity,
             "used_bytes": used,
-            "free_bytes": capacity - used,
+            "free_bytes": capacity - used - write_buffer,
+            "dirty_bytes": dirty,
+            "write_buffer_bytes": write_buffer,
             # live read-serving backlog across member nodes (contention-aware
             # read scheduler): bytes queued on the read disks and NIC-tx
             "read_queue_bytes": float(

@@ -2,6 +2,7 @@
 
 from .checkpoint import CheckpointManager, SamplerState, config_digest
 from .fault import PreemptionGuard, RestartPolicy, StragglerMonitor, run_with_restarts
+from .hoardckpt import HoardCheckpointManager
 from .optimizer import (
     AdamWConfig,
     adamw_update,
@@ -14,7 +15,8 @@ from .optimizer import (
 from .step import init_train_state, make_eval_step, make_train_step
 
 __all__ = [
-    "AdamWConfig", "CheckpointManager", "PreemptionGuard", "RestartPolicy",
+    "AdamWConfig", "CheckpointManager", "HoardCheckpointManager",
+    "PreemptionGuard", "RestartPolicy",
     "SamplerState", "StragglerMonitor", "adamw_update", "compress_int8",
     "config_digest", "decompress_int8", "init_opt_state", "init_train_state",
     "make_eval_step", "make_train_step", "opt_state_specs",

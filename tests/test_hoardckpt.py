@@ -1,0 +1,211 @@
+"""Checkpointing through HoardFS + fault-injection matrix (ISSUE 6, sat. 2).
+
+``HoardCheckpointManager`` rebuilds the tmp-dir + atomic-rename contract of
+``train/checkpoint.py`` from ``pwrite``/``fsync`` alone.  The matrix here
+kills the writing node mid-burst through the workload engine's
+``scale_event(fail=...)`` surface and asserts, for both write policies:
+
+* a torn (uncommitted) save is wholly invisible — ``latest_step`` returns
+  the previous committed step,
+* the latest *committed* checkpoint restores bit-identically through a
+  surviving node's HoardFS reads (replicas + elastic re-striping),
+* ``run_with_restarts`` resumes the training loop at the restored step.
+"""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    PAPER,
+    CacheManager,
+    DatasetSpec,
+    SimClock,
+    StripeStore,
+    Topology,
+    TopologyConfig,
+    WRITE_BACK,
+    WRITE_THROUGH,
+)
+from repro.core.placement import PlacementEngine
+from repro.core.workload import ClusterScheduler
+from repro.fs import HoardFS, MetadataService
+from repro.train import HoardCheckpointManager, SamplerState, run_with_restarts
+
+CAL = dataclasses.replace(
+    PAPER, dataset_bytes=1024 * 1024.0, dataset_items=1024, batch_items=128
+)
+IPC = 64
+IB = int(CAL.item_bytes)
+
+
+def _cluster(tmp_path):
+    clock = SimClock()
+    topo = Topology(TopologyConfig(nodes_per_rack=4), clock)
+    store = StripeStore(topo, root=str(tmp_path))
+    cache = CacheManager(
+        topo, store, clock, items_per_chunk=IPC, fill_bw=CAL.fill_bw, replication=2
+    )
+    cache.register(DatasetSpec("ckpt", "nfs://store/ckpt", CAL.dataset_items, IB))
+    cache.admit("ckpt", topo.nodes, materialize=True)
+    cache.mark_filled("ckpt")
+    engine = ClusterScheduler(
+        clock, topo, store, cache, PlacementEngine(topo, cache), cal=CAL
+    )
+    return clock, topo, store, cache, engine
+
+
+def _mount(clock, topo, store, cache, node, **kw):
+    return HoardFS(
+        clock, topo, cache, MetadataService(store), topo.nodes[node], cal=CAL, **kw
+    )
+
+
+def _state(tag: int):
+    """Deterministic mixed-dtype pytree (bit-identity must cover dtypes)."""
+    params = {
+        "w": (np.arange(48, dtype=np.float32) * (tag + 1)).reshape(6, 8),
+        "b": np.full(8, tag, dtype=np.float16),
+    }
+    opt = {"m": np.arange(8, dtype=np.int32) + tag, "t": np.float64(tag) / 3}
+    return params, opt
+
+
+def _assert_tree_equal(got, want):
+    for k in want:
+        np.testing.assert_array_equal(np.asarray(got[k]), np.asarray(want[k]))
+        assert np.asarray(got[k]).dtype == np.asarray(want[k]).dtype
+
+
+# ------------------------------------------------------------- round trip
+def test_save_restore_roundtrip_bit_identical(tmp_path):
+    clock, topo, store, cache, _ = _cluster(tmp_path)
+    fs = _mount(clock, topo, store, cache, 0)
+    mgr = HoardCheckpointManager(fs, "ckpt")
+    p, o = _state(4)
+    samp = SamplerState(epoch=2, step_in_epoch=17, seed=99)
+    path = mgr.save(4, p, o, sampler=samp, config_digest="abc123")
+    assert path == "/hoard/ckpt/shard-000004.bin"
+    assert mgr.latest_step() == 4
+    step, rp, ro, rs = mgr.restore(template={"params": p, "opt": o})
+    assert (step, rs) == (4, samp)
+    _assert_tree_equal(rp, p)
+    _assert_tree_equal(ro, o)
+
+
+def test_slot_rotation_keeps_newest(tmp_path):
+    clock, topo, store, cache, _ = _cluster(tmp_path)
+    mgr = HoardCheckpointManager(_mount(clock, topo, store, cache, 0), "ckpt")
+    p, o = _state(1)
+    for step in (1, 2, 1 + mgr.keep):            # step 17 overwrites slot 1
+        mgr.save(step, p, o)
+    assert mgr.latest_step() == 1 + mgr.keep
+    step, *_ = mgr.restore(template={"params": p, "opt": o})
+    assert step == 1 + mgr.keep
+    step, *_ = mgr.restore(2, template={"params": p, "opt": o})
+    assert step == 2                              # older slot still addressable
+
+
+def test_oversized_checkpoint_rejected(tmp_path):
+    clock, topo, store, cache, _ = _cluster(tmp_path)
+    mgr = HoardCheckpointManager(_mount(clock, topo, store, cache, 0), "ckpt")
+    big = {"w": np.zeros(IPC * IB, dtype=np.float32)}   # 4x the slot size
+    with pytest.raises(ValueError, match="larger"):
+        mgr.save(0, big, {})
+
+
+def test_empty_namespace_has_no_checkpoint(tmp_path):
+    clock, topo, store, cache, _ = _cluster(tmp_path)
+    mgr = HoardCheckpointManager(_mount(clock, topo, store, cache, 0), "ckpt")
+    assert mgr.latest_step() is None              # pristine payload: no magic
+    with pytest.raises(FileNotFoundError):
+        mgr.restore(template={"params": {}, "opt": {}})
+
+
+# ------------------------------------------- fault-injection matrix (sat. 2)
+@pytest.mark.parametrize("policy", [WRITE_BACK, WRITE_THROUGH])
+def test_mid_burst_node_loss_torn_save_invisible(tmp_path, policy):
+    """Kill the writer via scale_event(fail) while a save is in flight: the
+    torn save is invisible, the previous committed step restores
+    bit-identically on a survivor."""
+    clock, topo, store, cache, engine = _cluster(tmp_path)
+    fs0 = _mount(clock, topo, store, cache, 0, write_policy=policy)
+    mgr = HoardCheckpointManager(fs0, "ckpt")
+    p1, o1 = _state(1)
+    p2, o2 = _state(2)
+    samp2 = SamplerState(epoch=0, step_in_epoch=2, seed=7)
+    mgr.save(1, p1, o1)
+    mgr.save(2, p2, o2, sampler=samp2)
+
+    p3, o3 = _state(3)
+    ev = mgr.save(3, p3, o3, blocking=False)      # in flight when node 0 dies
+    done = engine.scale_event(0.0, fail=[0])
+    clock.run()
+    assert ev.value is None                       # the save reported failure
+    assert done.fired                             # re-striping committed
+
+    survivor = HoardCheckpointManager(
+        _mount(clock, topo, store, cache, 2, write_policy=policy), "ckpt"
+    )
+    assert survivor.latest_step() == 2
+    step, rp, ro, rs = survivor.restore(template={"params": p2, "opt": o2})
+    assert (step, rs) == (2, samp2)
+    _assert_tree_equal(rp, p2)
+    _assert_tree_equal(ro, o2)
+
+
+@pytest.mark.parametrize("policy", [WRITE_BACK, WRITE_THROUGH])
+def test_committed_burst_survives_node_loss(tmp_path, policy):
+    """A save that completed BEFORE the failure is durable under either
+    policy — every fsync'd byte is readable after any single node loss."""
+    clock, topo, store, cache, engine = _cluster(tmp_path)
+    mgr = HoardCheckpointManager(
+        _mount(clock, topo, store, cache, 0, write_policy=policy), "ckpt"
+    )
+    p3, o3 = _state(3)
+    samp3 = SamplerState(epoch=1, step_in_epoch=3, seed=5)
+    mgr.save(3, p3, o3, sampler=samp3)
+
+    engine.scale_event(0.0, fail=[0])
+    clock.run()
+
+    survivor = HoardCheckpointManager(
+        _mount(clock, topo, store, cache, 1, write_policy=policy), "ckpt"
+    )
+    assert survivor.latest_step() == 3
+    step, rp, ro, rs = survivor.restore(template={"params": p3, "opt": o3})
+    assert (step, rs) == (3, samp3)
+    _assert_tree_equal(rp, p3)
+    _assert_tree_equal(ro, o3)
+
+
+def test_restart_loop_resumes_at_committed_step(tmp_path):
+    """train/fault.py integration: the restart loop restores the latest
+    committed checkpoint and resumes exactly there."""
+    clock, topo, store, cache, engine = _cluster(tmp_path)
+    p5, o5 = _state(5)
+    template = {"params": p5, "opt": o5}
+    calls = []
+
+    def loop_fn(resume):
+        calls.append(resume)
+        if resume is None:
+            # first attempt: node 0 checkpoints step 5 then "dies"
+            writer = HoardCheckpointManager(
+                _mount(clock, topo, store, cache, 0), "ckpt"
+            )
+            writer.save(5, p5, o5, sampler=SamplerState(epoch=1, step_in_epoch=5, seed=3))
+            engine.scale_event(0.0, fail=[0])
+            clock.run()
+            raise RuntimeError("simulated node loss")
+        # restart: a survivor restores and continues
+        mgr = HoardCheckpointManager(_mount(clock, topo, store, cache, 3), "ckpt")
+        step, rp, ro, samp = mgr.restore(template=template)
+        assert samp == SamplerState(epoch=1, step_in_epoch=5, seed=3)
+        _assert_tree_equal(rp, p5)
+        return step + 1
+
+    final = run_with_restarts(loop_fn)
+    assert final == 6
+    assert calls == [None, -1]                    # one crash, one resume

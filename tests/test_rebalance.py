@@ -80,8 +80,14 @@ def test_manifest_v3_roundtrip_and_legacy():
     blob["schema_version"] = 2
     assert StripeManifest.from_json(json.dumps(blob)).membership_epoch == 0
 
+    # v3 blob (no chunk_dirty) loads fully clean
+    blob = json.loads(man.to_json())
+    blob.pop("chunk_dirty")
+    blob["schema_version"] = 3
+    assert not any(StripeManifest.from_json(json.dumps(blob)).chunk_dirty)
+
     # future versions are refused, never guessed
-    blob["schema_version"] = 4
+    blob["schema_version"] = 5
     with pytest.raises(StripeError, match="newer"):
         StripeManifest.from_json(json.dumps(blob))
 

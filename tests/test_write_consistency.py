@@ -1,0 +1,259 @@
+"""Crash-consistency property suite: op sequences against a durability oracle.
+
+Satellite 1 of ISSUE 6.  Each example decodes a list of integers into an
+operation sequence over the write plane —
+
+    write      stage bytes into a writer's overlay (any node, any range)
+    fsync      replicate + atomically commit one writer's pending chunks
+    fail       kill one node mid-anything, then re-replicate (single-failure
+               regime: the durability contract is defined per failure)
+    evict      drain -> evict -> prefilled re-admission (remote round-trip)
+
+— and replays the same sequence against a plain-Python oracle that knows
+what every chunk *must* contain.  After every op the full dataset is read
+back through the store and compared byte-for-byte.  The two contract halves
+under test:
+
+* every fsync'd byte is readable after any single node failure,
+* un-fsync'd data is never partially visible — a writer's death makes its
+  buffered overlay vanish wholly, reads fall back to committed bytes.
+
+The suite runs on real Hypothesis when installed and on the bundled
+deterministic fallback otherwise (``lists(integers(...))`` only — the
+fallback has no composite/stateful API, so op decoding is arithmetic).
+
+Determinism: like ``test_determinism.py``, a subprocess test pins the whole
+scenario across PYTHONHASHSEED values — the write path must never route a
+simulation-visible decision through ``hash()``.
+"""
+
+import json
+import os
+import shutil
+import subprocess
+import sys
+import tempfile
+import zlib
+
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import (
+    CacheManager,
+    DatasetSpec,
+    SimClock,
+    StripeStore,
+    Topology,
+    TopologyConfig,
+    WritePlane,
+)
+
+# tiny geometry: 64 items x 64 B, 8-item chunks -> 8 chunks of 512 B
+N_ITEMS, IB, IPC = 64, 64, 8
+CB = IPC * IB
+N_CHUNKS = N_ITEMS // IPC
+N_NODES = 4
+R = 2
+
+N_OPS = 4                      # op kinds (decoded as v % N_OPS)
+
+
+def _build(root):
+    clock = SimClock()
+    topo = Topology(TopologyConfig(nodes_per_rack=N_NODES), clock)
+    store = StripeStore(topo, root=root)
+    cache = CacheManager(
+        topo, store, clock, items_per_chunk=IPC, fill_bw=1e9, replication=R
+    )
+    cache.register(DatasetSpec("ds", "nfs://ds", N_ITEMS, IB))
+    cache.admit("ds", topo.nodes, materialize=True)
+    cache.mark_filled("ds")
+    planes = [WritePlane(clock, topo, cache, "ds", n) for n in topo.nodes]
+    return clock, topo, store, cache, planes
+
+
+class _Oracle:
+    """What every chunk must contain: committed image + per-writer overlays."""
+
+    def __init__(self, store):
+        man = store.manifests["ds"]
+        self.committed = {
+            c: bytearray(store.read_chunk_verified("ds", c, store.topology.node(0)))
+            for c in range(N_CHUNKS)
+        }
+        self.overlays = {}          # chunk -> (writer, bytearray image)
+
+    def write(self, writer, chunk, off, data):
+        if chunk in self.overlays and self.overlays[chunk][0] != writer:
+            return False            # single-writer rule: the store refuses too
+        img = self.overlays.get(chunk, (writer, bytearray(self.committed[chunk])))[1]
+        img[off : off + len(data)] = data
+        self.overlays[chunk] = (writer, img)
+        return True
+
+    def fsync(self, writer):
+        for c, (w, img) in list(self.overlays.items()):
+            if w == writer:
+                self.committed[c] = bytearray(img)
+                del self.overlays[c]
+
+    def fail(self, node):
+        # torn writes vanish wholly: every overlay of this writer is gone
+        self.overlays = {c: v for c, v in self.overlays.items() if v[0] != node}
+
+    def expected(self, chunk):
+        if chunk in self.overlays:
+            return bytes(self.overlays[chunk][1])
+        return bytes(self.committed[chunk])
+
+
+def _check_all(store, topo, oracle, live):
+    """Full read-back: every chunk, through the item read path, from a live
+    node — must equal the oracle image byte-for-byte."""
+    reader = topo.nodes[live[0]]
+    for c in range(N_CHUNKS):
+        got = b"".join(
+            store.read_item("ds", c * IPC + i, reader) for i in range(IPC)
+        )
+        want = oracle.expected(c)
+        assert got == want, f"chunk {c}: read-back diverged from oracle"
+
+
+def _payload(tag: int, length: int) -> bytes:
+    # deterministic across processes and hash seeds (CRC-seeded, not hash())
+    seed = zlib.crc32(f"wblob:{tag}".encode())
+    return bytes((seed + i * 131) % 256 for i in range(length))
+
+
+def _run_ops(ops, root):
+    """Replay decoded ops against the store and the oracle in lock-step."""
+    clock, topo, store, cache, planes = _build(root)
+    oracle = _Oracle(store)
+    live = list(range(N_NODES))
+    failed_once = False
+
+    for i, v in enumerate(ops):
+        kind = v % N_OPS
+        arg = v // N_OPS
+        if kind == 0:                                    # write
+            writer = live[arg % len(live)]
+            chunk = (arg // 7) % N_CHUNKS
+            off = (arg // 3) % (CB - 1)
+            length = 1 + (arg // 5) % (CB - off)
+            data = _payload(i, length)
+            if oracle.write(writer, chunk, off, data):
+                planes[writer].write([(chunk, off, data)])
+                clock.run()
+        elif kind == 1:                                  # fsync
+            writer = live[arg % len(live)]
+            planes[writer].fsync()
+            clock.run()
+            oracle.fsync(writer)
+        elif kind == 2 and len(live) > 1 and not failed_once:   # fail + repair
+            victim = live[arg % len(live)]
+            store.fail_node(victim)
+            oracle.fail(victim)
+            live.remove(victim)
+            _check_all(store, topo, oracle, live)        # contract AT the failure
+            store.repair("ds")                           # node replaced; r back to 2
+            live.append(victim)
+            live.sort()
+            failed_once = True                           # single-failure regime
+        elif kind == 3:                                  # evict -> readmit
+            for p in planes:
+                p.drain()
+            clock.run()
+            if store.pending_write_bytes("ds") or store.dirty_chunks("ds"):
+                continue                                 # overlays in flight: skip
+            for c in range(N_CHUNKS):                    # flushed == committed now
+                oracle.committed[c] = bytearray(store.remote_payload(store.manifests["ds"], c))
+            cache.evict("ds")
+            cache.admit("ds", topo.nodes, materialize=True)
+            cache.mark_filled("ds")
+            failed_once = False                          # fresh stripes, fresh budget
+        _check_all(store, topo, oracle, live)
+
+    # final quiescence: drain everything, nothing dirty or buffered remains
+    for p in planes:
+        p.drain()
+    clock.run()
+    _check_all(store, topo, oracle, live)
+    return store, oracle
+
+
+@settings(max_examples=15, deadline=None)
+@given(ops=st.lists(st.integers(min_value=0, max_value=2**20), min_size=1, max_size=14))
+def test_write_plane_crash_consistency(ops):
+    root = tempfile.mkdtemp(prefix="hoard-consistency-")
+    try:
+        _run_ops(ops, root)
+    finally:
+        shutil.rmtree(root, ignore_errors=True)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    writer=st.integers(min_value=0, max_value=N_NODES - 1),
+    chunk=st.integers(min_value=0, max_value=N_CHUNKS - 1),
+    off=st.integers(min_value=0, max_value=CB - 2),
+)
+def test_torn_write_never_partially_visible(writer, chunk, off):
+    """Direct shape of the second contract half: buffer bytes, kill the
+    writer before fsync, and the read image equals the pre-write bytes
+    exactly — not a torn mix."""
+    root = tempfile.mkdtemp(prefix="hoard-torn-")
+    try:
+        clock, topo, store, cache, planes = _build(root)
+        survivor = topo.nodes[(writer + 1) % N_NODES]
+        before = b"".join(
+            store.read_item("ds", chunk * IPC + i, survivor) for i in range(IPC)
+        )
+        data = _payload(writer, min(128, CB - off))
+        planes[writer].write([(chunk, off, data)])
+        clock.run()
+        store.fail_node(writer)
+        after = b"".join(
+            store.read_item("ds", chunk * IPC + i, survivor) for i in range(IPC)
+        )
+        assert after == before
+    finally:
+        shutil.rmtree(root, ignore_errors=True)
+
+
+# ------------------------------------------------- PYTHONHASHSEED stability
+_SNIPPET = r"""
+import json, sys, tempfile, zlib
+sys.path.insert(0, "tests")
+from repro._compat.hypothesis_fallback import install
+install()                     # no conftest in a bare subprocess
+from test_write_consistency import _run_ops, N_CHUNKS, IPC
+
+OPS = [0, 5, 1, 42, 901, 2, 3, 77, 1 + 4 * 3, 0, 13, 1]
+store, oracle = _run_ops(OPS, tempfile.mkdtemp())
+man = store.manifests["ds"]
+fp = {
+    "crc": [int(zlib.crc32(oracle.expected(c))) for c in range(N_CHUNKS)],
+    "chunk_crc": [int(x) for x in man.chunk_crc],
+    "dirty": [int(b) for b in man.chunk_dirty],
+    "nodes": [list(map(int, r)) for r in man.chunk_nodes],
+}
+print(json.dumps(fp, sort_keys=True))
+"""
+
+
+def test_consistency_suite_is_hashseed_stable():
+    """The replayed scenario's full end state is byte-identical across
+    PYTHONHASHSEED values — no ``hash()`` leaks into the write path."""
+    outs = []
+    for seed in ("0", "12345"):
+        env = dict(
+            os.environ,
+            PYTHONHASHSEED=seed,
+            PYTHONPATH="src" + os.pathsep + os.environ.get("PYTHONPATH", ""),
+        )
+        proc = subprocess.run(
+            [sys.executable, "-c", _SNIPPET],
+            capture_output=True, text=True, env=env, check=True,
+        )
+        outs.append(json.loads(proc.stdout))
+    assert outs[0] == outs[1]
