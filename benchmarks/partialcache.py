@@ -1,0 +1,136 @@
+"""Partial-caching sweep: cache:dataset ratio vs hit rate and epoch time.
+
+The tentpole question of ISSUE 7: what does Hoard buy when the dataset does
+NOT fit?  Each point admits the ImageNet-like dataset with
+``allow_partial=True`` into a cache sized to ``ratio x dataset_bytes``
+(0.1x - 2x), runs a cold epoch (on-demand fill of the resident subset) and
+a warm epoch (resident chunks from the stripes, the rest read through to
+the remote share every time), and derives:
+
+* **warm hit rate** — 1 - (remote bytes moved during the warm epoch /
+  dataset bytes).  Structural: equals the resident fraction the degraded
+  admission locked in, so it must grow monotonically with the ratio.
+* **warm epoch time** — must shrink monotonically as residency grows, and
+  the 50%-resident point must still beat the pure-remote baseline by >=
+  ``MIN_SPEEDUP_R50`` (every cached byte is a byte the congested remote
+  NIC does not serve four jobs).
+
+All quantities are deterministic simulated seconds/bytes — safe for the CI
+perf-trajectory gate in ``benchmarks/baseline.json``.
+
+Run: ``PYTHONPATH=src python -m benchmarks.run --only partialcache``
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core import PAPER
+from repro.core.cluster import run_scenario
+
+from .common import Row, record_metric
+
+# 16 MB dataset in 64 chunks of 256 KB (writeburst's scale): fine enough
+# that even the 0.1x point fits a handful of whole chunks
+CAL = dataclasses.replace(
+    PAPER, dataset_bytes=16 * 1024 * 1024.0, dataset_items=16384, batch_items=512
+)
+IPC = 256
+N_CACHE_NODES = 4
+RATIOS = (0.1, 0.25, 0.5, 1.0, 2.0)
+MIN_SPEEDUP_R50 = 1.4
+
+
+def _hoard(ratio: float, epochs: int):
+    return run_scenario(
+        "hoard",
+        epochs=epochs,
+        n_jobs=4,
+        cal=CAL,
+        fill="ondemand",
+        capacity_per_node=ratio * CAL.dataset_bytes / N_CACHE_NODES,
+        allow_partial=True,
+        items_per_chunk=IPC,
+    )
+
+
+def _remote_bytes(res) -> float:
+    return res.store.topology.remote_nic.busy_bytes
+
+
+def partialcache_rows():
+    rows: list[Row] = []
+    lines = [
+        "Partial caching — cache:dataset ratio sweep "
+        f"({CAL.dataset_bytes/1e6:.0f} MB dataset, 64 chunks, 4 jobs, "
+        "on-demand fill + read-through)"
+    ]
+
+    rem = run_scenario("rem", epochs=1, n_jobs=4, cal=CAL)
+    rem_epoch = rem.mean_epoch_times[0]
+    rows.append(Row("partialcache/rem_epoch", rem_epoch * 1e6, "pure remote"))
+    record_metric("partialcache", "rem_epoch_s", rem_epoch, better="lower")
+
+    hits, warms = [], []
+    for ratio in RATIOS:
+        cold = _hoard(ratio, epochs=1)
+        both = _hoard(ratio, epochs=2)
+        # epochs=1 and epochs=2 share every parameter and seed, so the runs
+        # are identical through epoch 1; the delta is the warm epoch's
+        # remote traffic (read-through misses), cluster-wide
+        warm_remote = max(0.0, _remote_bytes(both) - _remote_bytes(cold))
+        # 4 jobs each sweep the dataset once per epoch
+        hit = 1.0 - warm_remote / (4 * CAL.dataset_bytes)
+        warm = both.mean_epoch_times[1]
+        resident = both.store.resident_fraction("imagenet")
+        hits.append(hit)
+        warms.append(warm)
+        tag = f"r{int(ratio * 100)}"
+        rows.append(Row(
+            f"partialcache/warm_{tag}", warm * 1e6,
+            f"hit={hit:.2f},resident={resident:.2f}",
+        ))
+        record_metric("partialcache", f"hit_warm_{tag}", hit, better="higher")
+        if ratio in (0.5, 1.0):
+            record_metric("partialcache", f"warm_{tag}_s", warm, better="lower")
+        lines.append(
+            f"  ratio {ratio:4.2f}x: resident {resident:5.1%}, warm hit rate "
+            f"{hit:5.1%}, warm epoch {warm:.3f}s "
+            f"(vs remote {rem_epoch:.3f}s -> {rem_epoch / warm:.2f}x)"
+        )
+
+    speedup_r50 = rem_epoch / warms[RATIOS.index(0.5)]
+    record_metric("partialcache", "speedup_r50", speedup_r50, better="higher")
+    lines.append(
+        f"  50%-resident warm epoch beats pure remote by {speedup_r50:.2f}x "
+        f"(floor {MIN_SPEEDUP_R50:.1f}x)"
+    )
+
+    for i in range(1, len(RATIOS)):
+        if hits[i] < hits[i - 1] - 1e-9:
+            raise AssertionError(
+                f"hit rate not monotone in cache ratio: {hits[i - 1]:.3f} at "
+                f"{RATIOS[i - 1]}x -> {hits[i]:.3f} at {RATIOS[i]}x"
+            )
+        if warms[i] > warms[i - 1] * 1.001:
+            raise AssertionError(
+                f"warm epoch time not monotone in cache ratio: "
+                f"{warms[i - 1]:.3f}s at {RATIOS[i - 1]}x -> {warms[i]:.3f}s "
+                f"at {RATIOS[i]}x"
+            )
+    if hits[-1] < 0.999:
+        raise AssertionError(
+            f"fully-fitting cache should serve the warm epoch locally, got "
+            f"hit rate {hits[-1]:.3f}"
+        )
+    if speedup_r50 < MIN_SPEEDUP_R50:
+        raise AssertionError(
+            f"partialcache acceptance failed: 50%-resident warm epoch only "
+            f"{speedup_r50:.2f}x over pure remote (floor {MIN_SPEEDUP_R50:.1f}x)"
+        )
+    return rows, lines
+
+
+if __name__ == "__main__":
+    for line in partialcache_rows()[1]:
+        print(line)

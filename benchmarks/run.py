@@ -90,6 +90,7 @@ def main() -> None:
     from .fsbench import fsbench_rows
     from .ingest_demand import ingest_rows
     from .multitenant import multitenant_rows
+    from .partialcache import partialcache_rows
     from .rebalance import rebalance_rows
     from .roofline_table import roofline_rows
     from .writeburst import writeburst_rows
@@ -111,13 +112,14 @@ def main() -> None:
         ("fsbench", fsbench_rows),
         ("rebalance", rebalance_rows),
         ("writeburst", writeburst_rows),
+        ("partialcache", partialcache_rows),
     ]
     if args.quick:
         benches = [
             b for b in benches
             if b[0] in (
                 "table3", "table5", "headline", "roofline", "ingest",
-                "fsbench", "rebalance", "writeburst",
+                "fsbench", "rebalance", "writeburst", "partialcache",
             )
         ]
     if args.only:

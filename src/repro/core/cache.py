@@ -1,12 +1,21 @@
 """CacheManager: dataset-granularity cache lifecycle (the paper's Requirement 2).
 
-The unit of admission, eviction, pinning and prefetch is the *whole dataset* —
+The unit of admission, eviction, pinning and prefetch is the *dataset* —
 never a file or block.  Rationale (paper Section 2): every epoch touches the
-full dataset in a fresh permutation, so a partially-resident dataset is as
-good as absent and block-LRU merely thrashes.  Dataset lifecycle is decoupled
-from job lifecycle: a dataset stays cached after its jobs exit, so repeated
-runs (think-time iteration) and parallel hyper-parameter sweeps hit warm
-stripes.
+full dataset in a fresh permutation, so block-LRU merely thrashes.  Dataset
+lifecycle is decoupled from job lifecycle: a dataset stays cached after its
+jobs exit, so repeated runs (think-time iteration) and parallel
+hyper-parameter sweeps hit warm stripes.
+
+Beyond the paper (ISSUE 7, following NoPFS / Krichevsky et al.): admission
+may be *fractional*.  ``admit(fraction=0.5)`` — or ``degrade_to_partial=True``
+when the dataset exceeds reclaimable capacity — reserves stripes for the
+hottest k% of chunks only (per-chunk decayed access heat, see
+``StripeStore.note_chunk_access``); the rest read through to the remote
+store.  The matching eviction surface is :meth:`CacheManager.evict_chunks`,
+a chunk-granular LRU that demotes cold chunks instead of destroying whole
+datasets.  Both preserve the paper's contract when unused: the default
+``admit()`` is still all-or-nothing.
 
 Mirrors the paper's Kubernetes surface without Kubernetes:
 
@@ -26,6 +35,8 @@ from dataclasses import dataclass, field
 from enum import Enum
 from typing import Optional, Sequence
 
+import numpy as np
+
 from .simclock import Event, SimClock
 from .stripestore import StripeStore
 from .topology import Node, Topology
@@ -39,7 +50,12 @@ class EvictionPolicy(str, Enum):
 class CacheState(str, Enum):
     REGISTERED = "registered"    # known remote dataset, nothing cached
     FILLING = "filling"          # prefetch/first-epoch fill in progress
-    CACHED = "cached"
+    CACHED = "cached"            # every chunk resident and filled
+    # terminal state of a fractional admission (or a CACHED dataset after
+    # evict_chunks): the resident subset is fully filled, everything else
+    # reads through to remote.  Distinct from CACHED so statfs/ls never
+    # report a partially-resident dataset as fully cached (ISSUE 7 bugfix).
+    PARTIAL = "partial"
     EVICTING = "evicting"
 
 
@@ -169,6 +185,37 @@ class CacheManager:
             raise KeyError(f"unknown dataset {dataset_id!r}; register() it first")
         return self.entries[dataset_id]
 
+    def _dirty_held_bytes(self, node_ids: set, exclude: Optional[str]) -> int:
+        """Bytes on the target nodes that eviction cannot reclaim *solely*
+        because the owning dataset holds unflushed writes.
+
+        Datasets also excluded for another reason (pinned, live readers,
+        wrong state, off-node) are not counted — naming their bytes as
+        drain-recoverable in a ``CacheFullError`` would mislead the caller.
+        """
+        total = 0
+        for e in self.entries.values():
+            if (
+                e.spec.dataset_id == exclude
+                or e.state not in (CacheState.CACHED, CacheState.FILLING, CacheState.PARTIAL)
+                or e.pinned
+                or e.active_readers > 0
+                or not node_ids.intersection(e.nodes)
+            ):
+                continue
+            if self._holds_unflushed_writes(e.spec.dataset_id):
+                total += self.store.bytes_on_nodes(e.spec.dataset_id, node_ids)
+        return total
+
+    @staticmethod
+    def _dirty_note(dirty_held: int) -> str:
+        if not dirty_held:
+            return ""
+        return (
+            f"; {dirty_held:.2e} B more is held by unflushed writes "
+            f"(flush via WritePlane.drain to release it)"
+        )
+
     def admit(
         self,
         dataset_id: str,
@@ -178,8 +225,10 @@ class CacheManager:
         payload=None,
         items_per_chunk: Optional[int] = None,
         on_demand: bool = False,
+        fraction: Optional[float] = None,
+        degrade_to_partial: bool = False,
     ) -> CacheEntry:
-        """Reserve stripe space for the whole dataset (all-or-nothing).
+        """Reserve stripe space for the dataset (all-or-nothing by default).
 
         Evicts LRU datasets when the policy allows; raises ``CacheFullError``
         when MANUAL policy is active and space is insufficient (the paper's
@@ -189,28 +238,59 @@ class CacheManager:
         *unfilled*: the dataset is warmed during the first epoch of the job
         itself (remote read-through + clairvoyant prefetch, see
         :mod:`repro.core.prefetch`) instead of by an up-front
-        :meth:`prefetch` pass.  Capacity accounting is identical — admission
-        stays whole-dataset either way.
+        :meth:`prefetch` pass.  Capacity accounting is identical.
+
+        Partial caching (ISSUE 7): ``fraction=k`` caches only the hottest
+        ``floor(k * n_chunks)`` chunks (>= 1) by decayed access heat, ties
+        broken by ascending chunk index so a cold dataset caches a
+        deterministic prefix.  ``degrade_to_partial=True`` lets an admission
+        that cannot fit — even after evicting every idle victim — shrink to
+        the largest chunk subset that does fit instead of raising.  The
+        entry converges to ``PARTIAL`` instead of ``CACHED``; the rest of
+        the dataset reads through to the remote store.
         """
         entry = self._require(dataset_id)
-        if entry.state in (CacheState.CACHED, CacheState.FILLING):
+        if entry.state in (CacheState.CACHED, CacheState.FILLING, CacheState.PARTIAL):
             return entry
-        need = self.bytes_needed(dataset_id, items_per_chunk=items_per_chunk)
-        if self.free_bytes(nodes) < need and self.policy is EvictionPolicy.LRU:
+        ipc = items_per_chunk or self.items_per_chunk
+        n_chunks = -(-entry.spec.n_items // ipc)
+        chunk_charge = ipc * entry.spec.item_bytes * self.replication
+        if fraction is not None:
+            if not 0.0 < fraction <= 1.0:
+                raise ValueError(f"fraction must be in (0, 1], got {fraction}")
+            k = max(1, int(fraction * n_chunks))
+        else:
+            k = n_chunks
+        need = k * chunk_charge
+        node_ids = {n.node_id for n in nodes}
+        if self.free_bytes(nodes) < need:
             # dry-run first: evicting is destructive (victims must re-stream
             # from remote), so refuse up front when even evicting EVERY idle
             # dataset on the target nodes cannot free enough — a doomed
             # admission must not leave warm datasets destroyed behind it
-            node_ids = {n.node_id for n in nodes}
-            reclaimable = sum(
-                self.store.bytes_on_nodes(e.spec.dataset_id, node_ids)
-                for e in self._evictable(exclude=dataset_id, node_ids=node_ids)
+            reclaimable = (
+                sum(
+                    self.store.bytes_on_nodes(e.spec.dataset_id, node_ids)
+                    for e in self._evictable(exclude=dataset_id, node_ids=node_ids)
+                )
+                if self.policy is EvictionPolicy.LRU
+                else 0.0
             )
-            if self.free_bytes(nodes) + reclaimable < need:
+            if degrade_to_partial and self.free_bytes(nodes) + reclaimable < need:
+                k_fit = int((self.free_bytes(nodes) + reclaimable) // chunk_charge)
+                if k_fit >= 1:
+                    k = min(k, k_fit)
+                    need = k * chunk_charge
+            if (
+                self.policy is EvictionPolicy.LRU
+                and self.free_bytes(nodes) + reclaimable < need
+            ):
+                dirty_held = self._dirty_held_bytes(node_ids, exclude=dataset_id)
                 raise CacheFullError(
                     f"{dataset_id}: need {need:.2e} B on {len(nodes)} nodes; "
                     f"evicting every idle dataset on the target nodes frees only "
                     f"{reclaimable:.2e} B on top of {self.free_bytes(nodes):.2e} free"
+                    f"{self._dirty_note(dirty_held)}"
                 )
         while self.free_bytes(nodes) < need:
             if self.policy is EvictionPolicy.MANUAL:
@@ -223,21 +303,32 @@ class CacheManager:
             # dataset on disjoint nodes for zero gain
             victim = self._lru_victim(exclude=dataset_id, nodes=nodes)
             if victim is None:
+                dirty_held = self._dirty_held_bytes(node_ids, exclude=dataset_id)
                 raise CacheFullError(
                     f"{dataset_id}: cache exhausted and nothing evictable "
                     f"on the target nodes (all pinned or in use)"
+                    f"{self._dirty_note(dirty_held)}"
                 )
             self.evict(victim)
+        resident_chunks = None
+        if k < n_chunks:
+            heat = self.store.chunk_heat(dataset_id, n_chunks=n_chunks)
+            # hottest k chunks win a stripe; equal heat (a never-read
+            # dataset) degrades to the ascending-index prefix, deterministic
+            # under PYTHONHASHSEED by construction
+            order = np.lexsort((np.arange(n_chunks), -heat))
+            resident_chunks = sorted(int(c) for c in order[:k])
         self.store.create(
             dataset_id,
             entry.spec.n_items,
             entry.spec.item_bytes,
             nodes,
-            items_per_chunk=items_per_chunk or self.items_per_chunk,
+            items_per_chunk=ipc,
             replication=self.replication,
             materialize=materialize,
             payload=payload,
             prefill=not on_demand,
+            resident_chunks=resident_chunks,
         )
         entry.nodes = [n.node_id for n in nodes]
         entry.state = CacheState.FILLING
@@ -251,9 +342,14 @@ class CacheManager:
         return entry
 
     def mark_filled(self, dataset_id: str) -> None:
-        """Transition FILLING -> CACHED and wake waiters on ``fill_done``."""
+        """Fill complete: FILLING -> CACHED (or PARTIAL when only a chunk
+        subset is resident) and wake waiters on ``fill_done``."""
         entry = self._require(dataset_id)
-        entry.state = CacheState.CACHED
+        fully_resident = (
+            dataset_id not in self.store.manifests
+            or self.store.resident_fraction(dataset_id) >= 1.0
+        )
+        entry.state = CacheState.CACHED if fully_resident else CacheState.PARTIAL
         # the fill is over: detach the fill plane so later jobs take the
         # plain cached read path instead of threading every batch through
         # nothing-to-do fill-mask bookkeeping (jobs already holding the
@@ -275,12 +371,18 @@ class CacheManager:
     def note_chunk_filled(self, dataset_id: str) -> None:
         """Fill-plane callback after ``StripeStore.put_chunk``.
 
-        Flips the entry to CACHED the moment the last chunk lands, so an
-        on-demand fill converges to exactly the same steady state as an
-        up-front :meth:`prefetch`.
+        Flips the entry to its terminal state the moment the last *resident*
+        chunk lands, so an on-demand fill converges to exactly the same
+        steady state as an up-front :meth:`prefetch`.  The fraction is of
+        the resident subset — a fractionally-admitted dataset whose subset
+        is full lands in ``PARTIAL`` (``mark_filled`` decides), never in
+        ``CACHED`` with most of its chunks remote (the ISSUE 7 bugfix).
         """
         entry = self._require(dataset_id)
-        if entry.state is CacheState.FILLING and self.store.filled_fraction(dataset_id) >= 1.0:
+        if (
+            entry.state is CacheState.FILLING
+            and self.store.resident_filled_fraction(dataset_id) >= 1.0
+        ):
             self.mark_filled(dataset_id)
 
     def prefetch(self, dataset_id: str, nodes: Sequence[Node], **admit_kw) -> Event:
@@ -292,11 +394,16 @@ class CacheManager:
         completion fall back to the miss path for not-yet-resident chunks.
         """
         entry = self.admit(dataset_id, nodes, **admit_kw)
-        if entry.state is CacheState.CACHED:
+        if entry.state in (CacheState.CACHED, CacheState.PARTIAL):
             done = self.clock.event()
             done.set()
             return done
-        per_node = entry.spec.total_bytes * self.replication / max(1, len(nodes))
+        # chunk-padded, replication- and residency-aware: the stripe store
+        # allocates (and an on-demand fill streams) whole chunks, so sizing
+        # these flows from spec.total_bytes undercounted by the last chunk's
+        # padding — prepop fills finished early and moved fewer remote bytes
+        # than the equivalent on-demand fill (ISSUE 7 satellite bugfix)
+        per_node = self.store.dataset_resident_bytes(dataset_id) / max(1, len(nodes))
 
         flows = []
         for node in nodes:
@@ -357,6 +464,9 @@ class CacheManager:
         self._require(dataset_id).fill_plane = plane
 
     def is_cached(self, dataset_id: str) -> bool:
+        """True only for *fully* cached datasets — a PARTIAL dataset still
+        needs the read-through data plane, so it must not take the plain
+        cached fast path."""
         e = self.entries.get(dataset_id)
         return e is not None and e.state is CacheState.CACHED
 
@@ -383,6 +493,17 @@ class CacheManager:
                 "active_readers": e.active_readers,
                 "last_access": e.last_access,
                 "fill_progress": self.fill_progress(e.spec.dataset_id),
+                # partial caching: fraction of chunks holding stripe replicas
+                # and mean decayed chunk heat — 1.0/quiet for CACHED, the
+                # honest sub-1.0 figure for PARTIAL (statfs surfaces both)
+                "resident_fraction": (
+                    self.store.resident_fraction(e.spec.dataset_id)
+                    if e.spec.dataset_id in self.store.manifests
+                    else 0.0
+                ),
+                "chunk_heat_mean": (
+                    float(h.mean()) if len(h := self.store.chunk_heat(e.spec.dataset_id)) else 0.0
+                ),
                 "admissions": e.admissions,
                 "migrating_chunks": self.store.migrating_chunks(e.spec.dataset_id),
                 # write-path state: unflushed write-back debt + un-fsync'd
@@ -415,7 +536,7 @@ class CacheManager:
         return [
             e
             for e in self.entries.values()
-            if e.state in (CacheState.CACHED, CacheState.FILLING)
+            if e.state in (CacheState.CACHED, CacheState.FILLING, CacheState.PARTIAL)
             and not e.pinned
             and e.active_readers == 0
             and e.spec.dataset_id != exclude
@@ -491,9 +612,89 @@ class CacheManager:
         entry.state = CacheState.REGISTERED
         self._log("evict", dataset_id)
 
+    def evict_chunks(self, dataset_id: str, n_bytes: float) -> int:
+        """Chunk-granular LRU (ISSUE 7): demote the *coldest* resident chunks
+        until ``n_bytes`` of cache are freed; returns the bytes actually
+        freed (possibly 0, never raises for "nothing demotable").
+
+        The non-destructive counterpart of :meth:`evict`: the dataset
+        survives — CACHED degrades to PARTIAL, demoted chunks read through
+        to the remote store and can be re-promoted by
+        :meth:`promote_chunks`.  Safety mirrors whole-dataset eviction at
+        chunk granularity: pinned datasets and datasets with live readers
+        are refused outright, and dirty (unflushed write-back), un-fsync'd
+        or mid-migration chunks are never victims (``demote_chunks`` skips
+        them), so written data can never be shed to remote-less oblivion.
+        """
+        entry = self._require(dataset_id)
+        if dataset_id not in self.store.manifests:
+            return 0
+        if entry.pinned or entry.active_readers > 0:
+            return 0
+        man = self.store.manifests[dataset_id]
+        heat = self.store.chunk_heat(dataset_id)
+        resident = [c for c in range(man.n_chunks) if man.chunk_nodes[c]]
+        # coldest first; equal heat falls back to ascending chunk index so
+        # the victim order is deterministic under PYTHONHASHSEED
+        resident.sort(key=lambda c: (heat[c], c))
+        freed = 0
+        for c in resident:
+            if freed >= n_bytes:
+                break
+            freed += self.store.demote_chunks(dataset_id, [c])
+        if freed:
+            if (
+                entry.state is CacheState.CACHED
+                and self.store.resident_fraction(dataset_id) < 1.0
+            ):
+                entry.state = CacheState.PARTIAL
+            self._log("demote", dataset_id)
+        return freed
+
+    def promote_chunks(
+        self, dataset_id: str, n_chunks: Optional[int] = None
+    ) -> list[int]:
+        """Re-grant stripe replicas to the hottest non-resident chunks.
+
+        Grants up to ``n_chunks`` chunks (default: as many as free capacity
+        on the dataset's member nodes allows), flips a terminal PARTIAL
+        entry back to FILLING with a fresh ``fill_done`` event, and leaves
+        the byte movement to the fill plane: a ``FillTracker`` /
+        ``PrefetchScheduler`` lands the granted chunks through
+        ``put_chunk`` -> :meth:`note_chunk_filled`, which re-promotes the
+        entry to PARTIAL or — at full residency — CACHED.  Returns the
+        chunk indices granted.
+        """
+        entry = self._require(dataset_id)
+        if dataset_id not in self.store.manifests:
+            raise ValueError(f"dataset {dataset_id!r} is not admitted")
+        man = self.store.manifests[dataset_id]
+        non_resident = [c for c in range(man.n_chunks) if not man.chunk_nodes[c]]
+        if not non_resident:
+            return []
+        chunk_charge = man.chunk_bytes * man.replication
+        members = [self.topology.node(nid) for nid in man.node_ids]
+        fit = int(self.free_bytes(members) // max(1, chunk_charge))
+        want = len(non_resident) if n_chunks is None else min(int(n_chunks), len(non_resident))
+        want = min(want, fit)
+        if want <= 0:
+            return []
+        heat = self.store.chunk_heat(dataset_id)
+        non_resident.sort(key=lambda c: (-heat[c], c))     # hottest first
+        granted = self.store.grant_chunks(dataset_id, non_resident[:want])
+        if granted and entry.state in (CacheState.CACHED, CacheState.PARTIAL):
+            entry.state = CacheState.FILLING
+            entry.fill_done = self.clock.event()
+            self._log("promote", dataset_id)
+        return granted
+
     def delete(self, dataset_id: str) -> None:
         """Remove the dataset from the cache *and* the registry."""
         entry = self.entries.get(dataset_id)
-        if entry and entry.state in (CacheState.CACHED, CacheState.FILLING):
+        if entry and entry.state in (
+            CacheState.CACHED,
+            CacheState.FILLING,
+            CacheState.PARTIAL,
+        ):
             self.evict(dataset_id)
         self.entries.pop(dataset_id, None)

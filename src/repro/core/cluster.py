@@ -63,10 +63,12 @@ def build_cluster(
     capacity_per_node: float = 1e12,
     policy: EvictionPolicy = EvictionPolicy.LRU,
     replication: int = 1,
+    items_per_chunk: Optional[int] = None,
 ):
     clock = SimClock()
     topo = Topology(topo_cfg or TopologyConfig(), clock)
     store = StripeStore(topo)
+    kw = {} if items_per_chunk is None else {"items_per_chunk": items_per_chunk}
     cache = CacheManager(
         topo,
         store,
@@ -75,6 +77,7 @@ def build_cluster(
         policy=policy,
         fill_bw=cal.fill_bw,
         replication=replication,
+        **kw,
     )
     engine = PlacementEngine(topo, cache)
     return clock, topo, store, cache, engine
@@ -97,6 +100,10 @@ def run_scenario(
     prefetch_inflight: int = 8,
     seed: int = 0,
     replication: int = 1,
+    capacity_per_node: float = 1e12,
+    cache_fraction: Optional[float] = None,
+    allow_partial: bool = False,
+    items_per_chunk: Optional[int] = None,
 ) -> ScenarioResult:
     """Run ``n_jobs`` identical jobs over the chosen data path.
 
@@ -117,6 +124,14 @@ def run_scenario(
     * ``"ondemand"``     — shared chunk-granular fill during epoch 1:
                            clairvoyant prefetch scheduler + read-through
                            (remote store touched once per chunk, cluster-wide).
+
+    Partial caching (ISSUE 7): ``capacity_per_node`` bounds the NVMe cache
+    (the benchmarks' cache:dataset-ratio knob), ``cache_fraction`` caches
+    only the hottest fraction of chunks, and ``allow_partial`` degrades an
+    over-capacity admission to the largest chunk subset that fits instead of
+    raising ``CacheFullError``; non-resident chunks read through to remote.
+    ``items_per_chunk`` overrides the cache's chunk granularity (sweeps over
+    small cache:dataset ratios need finer chunks than the 4096-item default).
     """
     topo_cfg = topo_cfg or TopologyConfig()
     if remote_bw_scale != 1.0:
@@ -131,7 +146,8 @@ def run_scenario(
         )
         topo_cfg = replace(topo_cfg, remote_nic_bw=topo_cfg.remote_nic_bw * remote_bw_scale)
     clock, topo, store, cache, engine = build_cluster(
-        topo_cfg, cal=cal, replication=replication
+        topo_cfg, cal=cal, replication=replication,
+        capacity_per_node=capacity_per_node, items_per_chunk=items_per_chunk,
     )
     metrics = ClusterMetrics()
 
@@ -155,7 +171,12 @@ def run_scenario(
         # job runs.  For fill="ondemand" the engine wires the fill plane:
         # job0 (fill_driver) creates the FillTracker + clairvoyant schedule
         # when it finds the dataset FILLING with no plane attached.
-        cache.admit("imagenet", cnodes, on_demand=(fill == "ondemand"))
+        cache.admit(
+            "imagenet", cnodes,
+            on_demand=(fill == "ondemand"),
+            fraction=cache_fraction,
+            degrade_to_partial=allow_partial,
+        )
         if fill == "prepopulated":
             cache.mark_filled("imagenet")
         if prefetch:
@@ -184,6 +205,8 @@ def run_scenario(
                 prefetch_inflight=prefetch_inflight,
                 fill_driver=(j == 0 and fill == "ondemand"),
                 cal=cal,
+                cache_fraction=cache_fraction,
+                allow_partial=allow_partial,
             )
         )
     wl = scheduler.run(jobs)

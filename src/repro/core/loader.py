@@ -168,21 +168,28 @@ class StripeDataPlane:
       ``pread``/``pread_batch`` paths translate byte ranges into the same
       item arrays.
 
-    Classification per item (the on-demand tri-state):
+    Classification per item (tri-state + the partial-caching fourth class):
 
-    1. *stripe hit* — the item's chunk is resident; read from the closest
+    1. *stripe hit* — the item's chunk is filled; read from the closest
        replica (local NVMe, or a peer's stripe across the fabric),
     2. *fill join* — the chunk's remote->stripe transfer is already in
        flight; wait for it, then stripe-read,
     3. *remote fall-through* — start the chunk's fill now via the shared
        :class:`~repro.core.prefetch.FillTracker`; the fetched chunk lands in
-       the StripeStore so the dataset converges to fully cached.
+       the StripeStore so the dataset converges to fully cached,
+    4. *remote read-through* (ISSUE 7) — the chunk is *non-resident* (a
+       partial admission gave it no stripe replicas): stream the items
+       straight from the remote store at the calibrated NFS miss rate,
+       without landing anything — these chunks stay remote until
+       ``CacheManager.promote_chunks`` grants them a stripe.
 
-    ``fill_plane=None`` is the fully-cached configuration: every chunk must
-    already be filled (a read of an unfilled chunk with no fill plane is a
-    loud error, not a silent remote fetch).  ``positions=None`` skips the
-    pagepool stack-distance model — the POSIX scalar-read path uses this,
-    since that model is calibrated for epoch-permutation batch access.
+    ``fill_plane=None`` is the fully-cached / partial-terminal
+    configuration: every *resident* chunk must already be filled (a read of
+    an unfilled resident chunk with no fill plane is a loud error, not a
+    silent remote fetch); non-resident chunks still read through.
+    ``positions=None`` skips the pagepool stack-distance model — the POSIX
+    scalar-read path uses this, since that model is calibrated for
+    epoch-permutation batch access.
     """
 
     def __init__(
@@ -213,6 +220,10 @@ class StripeDataPlane:
         self.fill_plane = fill_plane
         self.prefetcher = prefetcher
         self._chunks_seen: Optional[np.ndarray] = None
+        # remote read-through stream for non-resident chunks (partial
+        # caching): same per-reader NFS service model as RemoteBackend,
+        # created lazily so fully-cached planes pay nothing
+        self._rt_stream: Optional[Resource] = None
 
     def _manifest(self):
         return self.cache.store.manifests[self.dataset_id]
@@ -281,8 +292,26 @@ class StripeDataPlane:
             self.dataset_id, item_ids // man.items_per_chunk
         )
 
+    def _readthrough_stream(self) -> Resource:
+        if self._rt_stream is None:
+            self._rt_stream = Resource(
+                f"{self.node.name}.remote_miss", self.cal.rem_miss_bw
+            )
+        return self._rt_stream
+
+    def _readthrough_flow(self, n_items: int) -> Event:
+        """Book a remote read-through stream for items of non-resident chunks."""
+        nbytes = float(n_items) * self.cal.item_bytes
+        if self.metrics:
+            self.metrics.count("remote_bytes", nbytes)
+            self.metrics.count("readthrough_bytes", nbytes)
+        return self.clock.transfer(
+            [self._readthrough_stream(), *self.topology.path_from_remote(self.node)],
+            nbytes,
+        )
+
     def ondemand_io(self, item_ids, epoch, positions) -> Event:
-        """Tri-state batch IO over the shared fill plane (see class doc).
+        """Four-class batch IO over the shared fill plane (see class doc).
 
         ``positions=None`` disables the pagepool model (POSIX byte streams);
         otherwise identical to what :meth:`HoardBackend.batch_io` books in
@@ -293,8 +322,14 @@ class StripeDataPlane:
         else:
             hits = self.pagepool.access_epoch_batch(item_ids, epoch, positions)
         filled = self.filled_mask(item_ids)
-        blocked_items = item_ids[(~filled) & (~hits)]
-        if len(blocked_items) and self.fill_plane is None:
+        blocked = (~filled) & (~hits)
+        # partial caching: a blocked item whose chunk holds no stripe
+        # replicas is served by remote read-through — there is nothing to
+        # fill and nowhere to land it
+        chunks = item_ids // self._manifest().items_per_chunk
+        resident = self.cache.store.chunk_resident_mask(self.dataset_id, chunks)
+        fill_items = item_ids[blocked & resident]
+        if len(fill_items) and self.fill_plane is None:
             raise StripeError(
                 f"{self.dataset_id}: read of unfilled chunk(s) with no fill "
                 f"plane attached (dataset not fully cached?)"
@@ -310,23 +345,40 @@ class StripeDataPlane:
         if client is not None:
             flows.append(client)
 
+        rt_mask = blocked & (~resident)
+        if rt_mask.any():
+            flows.append(self._readthrough_flow(int(rt_mask.sum())))
+            # stripe reads feed chunk heat through locate_batch; read-through
+            # items never get there, so note them here — their heat is what
+            # argues a remote chunk into the resident subset on promotion
+            self.cache.store.note_chunk_access(self.dataset_id, chunks[rt_mask])
+
         fill_events = []
-        if len(blocked_items):
-            for c in np.unique(self.fill_plane.chunks_of(blocked_items)):
+        if len(fill_items):
+            for c in np.unique(self.fill_plane.chunks_of(fill_items)):
                 ev = self.fill_plane.demand(int(c))
                 if ev is not None:
                     fill_events.append(ev)
         self.heartbeat(item_ids)
 
-        if not len(blocked_items):
+        if not len(fill_items):
             return self.clock.all_of(flows)
 
         def two_phase():
-            # phase A: immediate stripe/pagepool service + in-flight fills
+            # phase A: immediate stripe/pagepool/read-through service +
+            # in-flight fills
             if flows or fill_events:
                 yield self.clock.all_of([*flows, *fill_events])
-            # phase B: the just-landed chunks are served from the stripes
-            b_flows, stripe_b = self.stripe_flows(blocked_items)
+            # phase B: the just-landed chunks are served from the stripes.
+            # Re-check residency — a chunk demoted while its fill was in
+            # flight (put_chunk no-ops on replica-less chunks) falls back to
+            # remote read-through instead of a lost-chunk StripeError.
+            b_res = self.cache.store.chunk_resident_mask(
+                self.dataset_id, fill_items // self._manifest().items_per_chunk
+            )
+            b_flows, stripe_b = self.stripe_flows(fill_items[b_res])
+            if (~b_res).any():
+                b_flows.append(self._readthrough_flow(int((~b_res).sum())))
             b_client = self.client_flow(stripe_b, stripe_b)
             if b_client is not None:
                 b_flows.append(b_client)
@@ -426,10 +478,19 @@ class HoardBackend(_Backend):
     # ------------------------------------------------------------------- io
     def batch_io(self, item_ids, epoch, positions) -> Event:
         self.cache.touch(self.dataset_id)
-        if self.plane.fill_plane is not None:
+        entry = self.cache.entries[self.dataset_id]
+        if self.plane.fill_plane is not None or entry.state is CacheState.PARTIAL:
+            # on-demand fill in progress, or terminal partial residency:
+            # both need the four-class data plane (fill joins / read-through)
             return self.plane.ondemand_io(item_ids, epoch, positions)
         hits = self.plane.pagepool.access_epoch_batch(item_ids, epoch, positions)
-        resident = self._resident[item_ids]
+        # chunk residency bounds per-job residency: an AFM fill can only
+        # write back where a stripe replica exists, so items of non-resident
+        # chunks (partial admission) re-stream from remote every epoch
+        chunk_res = self.cache.store.chunk_resident_mask(
+            self.dataset_id, item_ids // self._manifest().items_per_chunk
+        )
+        resident = self._resident[item_ids] & chunk_res
 
         fill_mask = (~resident) & (~hits)
         flows = []
@@ -442,7 +503,7 @@ class HoardBackend(_Backend):
             # (many filling jobs) appears mechanistically.
             path = [self.fill_client, *self.topology.path_from_remote(self.node)]
             flows.append(self.clock.transfer(path, fill_bytes))
-            self._resident[item_ids[fill_mask]] = True
+            self._resident[item_ids[fill_mask & chunk_res]] = True
             if self.metrics:
                 self.metrics.count("remote_bytes", fill_bytes)
                 self.metrics.count("fill_bytes", fill_bytes)

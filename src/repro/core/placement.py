@@ -196,8 +196,12 @@ class PlacementEngine:
             self.inventory.take(n, job.gpus_per_node)
 
         if not cached_nodes:
+            # size the subset from what admit() will actually charge —
+            # chunk-rounded and replication-weighted — not spec.total_bytes,
+            # which undercounts by up to one chunk per replica (the
+            # bytes_needed docstring's warning, finally applied here)
             cache_nodes = self.choose_cache_nodes(
-                self.cache.entries[job.dataset_id].spec.total_bytes
+                self.cache.bytes_needed(job.dataset_id)
                 if job.dataset_id in self.cache.entries
                 else 0.0,
                 near=chosen,

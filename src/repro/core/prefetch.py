@@ -99,7 +99,10 @@ class FillTracker:
 
     @property
     def complete(self) -> bool:
-        return self.store.filled_fraction(self.dataset_id) >= 1.0
+        # of the *resident* subset: a partial admission's fill is done when
+        # every chunk that has a stripe to land on has landed — non-resident
+        # chunks are the read-through plane's job, not the fill plane's
+        return self.store.resident_filled_fraction(self.dataset_id) >= 1.0
 
     # -------------------------------------------------------------- cancel
     def cancel(self) -> None:
@@ -125,6 +128,12 @@ class FillTracker:
             )
         man = self._manifest()
         if man.is_filled(chunk):
+            return None
+        if not man.chunk_nodes[chunk]:
+            # non-resident (partial admission): there is no stripe replica
+            # to land the bytes on — the data plane serves the chunk by
+            # remote read-through instead, so a fill here would be wasted
+            # remote bandwidth.  None = "nothing for the fill plane to do".
             return None
         if chunk in self.inflight:
             return self.inflight[chunk]

@@ -82,6 +82,21 @@ class StripeManifest:
     def is_dirty(self, chunk: int) -> bool:
         return bool(self.chunk_dirty) and self.chunk_dirty[chunk]
 
+    def is_resident(self, chunk: int) -> bool:
+        """True when the chunk holds (or is reserved to hold) cache replicas.
+
+        Partial caching (ISSUE 7) distinguishes two zero-byte situations:
+        an *unfilled* resident chunk (replicas reserved, fill pending) and a
+        *non-resident* chunk (no replicas at all — reads fall through to the
+        remote store).  A chunk that is ``filled`` but replica-less is data
+        *lost* to node failure, a third, error-surfacing state.
+        """
+        return bool(self.chunk_nodes[chunk])
+
+    @property
+    def n_resident(self) -> int:
+        return sum(1 for reps in self.chunk_nodes if reps)
+
     @property
     def n_dirty(self) -> int:
         return int(sum(self.chunk_dirty)) if self.chunk_dirty else 0
@@ -209,6 +224,16 @@ class StripeStore:
         # (delete keeps this map), so an overwrite->evict->refetch round-trip
         # returns the written bytes, not the synthetic default payload
         self._remote: dict[tuple[str, int], bytes] = {}
+        # ---- per-chunk access heat (partial caching, ISSUE 7) ----
+        # exponentially-decayed access counter per chunk:
+        #   heat(t) = heat(t0) * 2^(-(t - t0) / halflife) + new accesses.
+        # Decay is applied lazily (per dataset, at read time), so the hot
+        # path is one np.add.at.  Heat survives delete() like _remote: a
+        # re-admission under pressure should cache the chunks history says
+        # are hot, not the first k by index.
+        self.heat_halflife: float = 60.0
+        self._heat: dict[str, np.ndarray] = {}
+        self._heat_t: dict[str, float] = {}
 
     # ----------------------------------------------------------------- create
     def create(
@@ -223,6 +248,7 @@ class StripeStore:
         materialize: bool = False,
         payload: Optional[Callable[[int], bytes]] = None,
         prefill: bool = True,
+        resident_chunks: Optional[Sequence[int]] = None,
     ) -> StripeManifest:
         """Lay out (and optionally write) a dataset across ``nodes``.
 
@@ -233,8 +259,13 @@ class StripeStore:
         but marks every chunk *unfilled*: the on-demand fill path
         (:mod:`repro.core.prefetch`) later lands chunks one at a time via
         :meth:`put_chunk` while epoch 1 of the training job is running.
-        Capacity is charged up front either way — admission stays
-        all-or-nothing (paper Requirement 2).
+        Capacity is charged up front for every *resident* chunk.
+
+        ``resident_chunks`` (partial caching, ISSUE 7) restricts the stripe
+        to a subset of chunk indices: chunks outside the subset get an empty
+        replica list, no capacity charge, and stay permanently unfilled until
+        :meth:`grant_chunks` promotes them — reads fall through to the remote
+        store.  ``None`` (the default) keeps the all-or-nothing contract.
         """
         if dataset_id in self.manifests:
             raise StripeError(f"dataset {dataset_id!r} already striped")
@@ -249,8 +280,22 @@ class StripeStore:
             node_ids=[n.node_id for n in nodes],
             materialized=materialize,
         )
+        resident = None
+        if resident_chunks is not None:
+            resident = {int(c) for c in resident_chunks}
+            if not resident:
+                raise StripeError("resident_chunks must name at least one chunk")
+            if min(resident) < 0 or max(resident) >= man.n_chunks:
+                raise StripeError("resident_chunks outside [0, n_chunks)")
         nn = len(nodes)
         for c in range(man.n_chunks):
+            if resident is not None and c not in resident:
+                # non-resident: no replicas, no bytes, reads fall through to
+                # the remote store via the data plane's read-through path
+                man.chunk_nodes.append([])
+                man.chunk_filled.append(False)
+                man.chunk_crc.append(0)
+                continue
             replicas = [man.node_ids[(c + r) % nn] for r in range(replication)]
             man.chunk_nodes.append(replicas)
             man.chunk_filled.append(bool(prefill))
@@ -318,6 +363,11 @@ class StripeStore:
         man = self.manifests[dataset_id]
         if man.is_filled(chunk):
             return False
+        if not man.chunk_nodes[chunk]:
+            # non-resident (partial admission) or wholly lost while the fill
+            # was in flight: there is nowhere to land the bytes, and flipping
+            # the filled bit here would fabricate a lost-data state
+            return False
         if man.materialized:
             blob = payload(chunk) if payload else self.remote_payload(man, chunk)
             man.chunk_crc[chunk] = zlib.crc32(blob)
@@ -358,6 +408,149 @@ class StripeStore:
         fail_node/delete, never a manifest scan.
         """
         return self._pending_fill[node_id]
+
+    # ------------------------------------- partial residency + heat (ISSUE 7)
+    def chunk_resident_mask(self, dataset_id: str, chunks: np.ndarray) -> np.ndarray:
+        """Vectorised residency (has >= 1 replica) for an array of chunk idx."""
+        mat = self._replica_matrix(dataset_id)
+        return mat[np.asarray(chunks, dtype=np.int64), 0] >= 0
+
+    def resident_fraction(self, dataset_id: str) -> float:
+        man = self.manifests[dataset_id]
+        return man.n_resident / max(1, man.n_chunks)
+
+    def resident_filled_fraction(self, dataset_id: str) -> float:
+        """Filled fraction *of the resident subset* — the fill plane's notion
+        of done for a partially-admitted dataset (a fill is complete when
+        every chunk that has somewhere to land has landed)."""
+        man = self.manifests[dataset_id]
+        return man.n_filled / max(1, man.n_resident)
+
+    def dataset_resident_bytes(self, dataset_id: str) -> int:
+        """Replica bytes this dataset occupies (or has reserved) cluster-wide.
+
+        Chunk-padded and replication-weighted: the exact capacity charge,
+        and — divided across the stripe nodes — the exact per-node byte
+        count an on-demand fill will stream through ``put_chunk``.
+        """
+        man = self.manifests[dataset_id]
+        return sum(len(reps) * man.chunk_bytes for reps in man.chunk_nodes)
+
+    def note_chunk_access(self, dataset_id: str, chunks: np.ndarray) -> None:
+        """Bump the decayed per-chunk access counter (one hit per entry).
+
+        ``chunks`` may repeat (per-item chunk indices of a batch); repeats
+        accumulate.  Decay is applied lazily per dataset:
+        ``heat *= 2 ** (-(now - t_last) / halflife)`` before the bump.
+        """
+        man = self.manifests.get(dataset_id)
+        if man is None:
+            return
+        now = self.topology.clock.now
+        heat = self._heat.get(dataset_id)
+        if heat is None or len(heat) != man.n_chunks:
+            heat = np.zeros(man.n_chunks, dtype=np.float64)
+            self._heat[dataset_id] = heat
+            self._heat_t[dataset_id] = now
+        dt = now - self._heat_t[dataset_id]
+        if dt > 0:
+            heat *= 2.0 ** (-dt / self.heat_halflife)
+            self._heat_t[dataset_id] = now
+        np.add.at(heat, np.asarray(chunks, dtype=np.int64), 1.0)
+
+    def chunk_heat(self, dataset_id: str, n_chunks: Optional[int] = None) -> np.ndarray:
+        """Current decayed heat per chunk (a copy; zeros when never touched).
+
+        ``n_chunks`` lets admission consult the surviving heat history of a
+        dataset that is not currently striped (heat outlives :meth:`delete`,
+        so a re-admission under pressure caches the historically hot subset).
+        """
+        man = self.manifests.get(dataset_id)
+        if n_chunks is None:
+            n_chunks = man.n_chunks if man is not None else 0
+        n = int(n_chunks)
+        heat = self._heat.get(dataset_id)
+        if heat is None or len(heat) != n:
+            return np.zeros(n, dtype=np.float64)
+        dt = self.topology.clock.now - self._heat_t[dataset_id]
+        if dt > 0:
+            return heat * 2.0 ** (-dt / self.heat_halflife)
+        return heat.copy()
+
+    def demote_chunks(self, dataset_id: str, chunks: Sequence[int]) -> int:
+        """Drop the cache replicas of the given chunks (chunk-granular LRU).
+
+        A demoted chunk becomes *non-resident*: no replicas, not filled,
+        reads fall through to the remote store, and :meth:`grant_chunks` can
+        re-promote it later.  Chunks that are dirty (unflushed write-back),
+        carry un-fsync'd overlays, or are mid-migration are silently skipped
+        — demotion must never discard bytes the remote store doesn't hold.
+        Returns the cache bytes freed (summed across replicas).
+        """
+        man = self.manifests[dataset_id]
+        freed = 0
+        touched = False
+        for chunk in chunks:
+            c = int(chunk)
+            replicas = man.chunk_nodes[c]
+            if not replicas:
+                continue
+            if man.is_dirty(c) or self.is_migrating(dataset_id, c):
+                continue
+            if (dataset_id, c) in self._pending_writes:
+                continue
+            for node_id in replicas:
+                self.node_usage[node_id] -= man.chunk_bytes
+                if not man.is_filled(c):
+                    self._pending_fill[node_id] -= man.chunk_bytes
+                if man.materialized:
+                    path = self._chunk_path(dataset_id, node_id, c)
+                    if os.path.exists(path):
+                        os.remove(path)
+                freed += man.chunk_bytes
+            man.chunk_nodes[c] = []
+            if not man.chunk_filled:
+                man.chunk_filled = [True] * man.n_chunks
+            man.chunk_filled[c] = False
+            touched = True
+        if touched:
+            self._replica_mat.pop(dataset_id, None)
+        return freed
+
+    def grant_chunks(self, dataset_id: str, chunks: Sequence[int]) -> list[int]:
+        """Reserve replicas for non-resident chunks (promotion / re-admission).
+
+        Each granted chunk gets ``man.replication`` replicas on the
+        least-loaded members of the dataset's node set, charged as
+        reserved-but-unfilled capacity; the fill plane later lands the bytes
+        through :meth:`put_chunk`.  Already-resident chunks are skipped.
+        Returns the chunk indices actually granted.
+        """
+        man = self.manifests[dataset_id]
+        granted: list[int] = []
+        for chunk in chunks:
+            c = int(chunk)
+            if man.chunk_nodes[c]:
+                continue
+            picks: list[int] = []
+            for _ in range(man.replication):
+                candidates = [nid for nid in man.node_ids if nid not in picks]
+                if not candidates:
+                    break
+                picks.append(min(candidates, key=lambda nid: self.node_usage[nid]))
+            if not picks:
+                continue
+            man.chunk_nodes[c] = picks
+            if not man.chunk_filled:
+                man.chunk_filled = [True] * man.n_chunks
+            man.chunk_filled[c] = False
+            for node_id in picks:
+                self.node_usage[node_id] += man.chunk_bytes
+                self._pending_fill[node_id] += man.chunk_bytes
+            granted.append(c)
+        if granted:
+            self._replica_mat.pop(dataset_id, None)
+        return granted
 
     # ------------------------------------------------------------ write plane
     # Bidirectional data plane (ISSUE 6).  Writes move through three states:
@@ -826,6 +1019,9 @@ class StripeStore:
         """
         man = self.manifests[dataset_id]
         chunks = np.asarray(items, dtype=np.int64) // man.items_per_chunk
+        # every located read is an access: feed the decayed per-chunk heat
+        # that partial admission and chunk-granular eviction rank by
+        self.note_chunk_access(dataset_id, chunks)
         cand = self._replica_matrix(dataset_id)[chunks]      # (batch, width)
         if np.any(cand[:, 0] < 0):
             # some requested chunk has zero replicas (unrepaired node loss);
@@ -859,6 +1055,12 @@ class StripeStore:
             raise StripeError("read_item on a non-materialized dataset")
         chunk = man.chunk_of_item(item)
         if not man.is_filled(chunk):
+            if not man.chunk_nodes[chunk]:
+                # non-resident (partial caching): remote read-through — serve
+                # the remote store's copy without landing anything locally
+                blob = self.remote_payload(man, chunk)
+                off = (item - chunk * man.items_per_chunk) * man.item_bytes
+                return blob[off : off + man.item_bytes]
             raise StripeError(
                 f"{dataset_id} chunk {chunk} not filled yet (on-demand fill in progress)"
             )

@@ -99,6 +99,12 @@ class WorkloadJob:
     ckpt_interval_s: float = 0.0
     ckpt_bytes: float = 0.0
     ckpt_policy: str = "writeback"       # "writeback" | "writethrough"
+    # ---- partial caching (ISSUE 7): cache only the hottest fraction of the
+    # dataset's chunks (None = whole dataset), and/or let an over-capacity
+    # admission degrade to the largest chunk subset that fits instead of
+    # failing; the rest of the dataset reads through to the remote store
+    cache_fraction: Optional[float] = None
+    allow_partial: bool = False
 
     def __post_init__(self):
         if self.backend not in BACKENDS:
@@ -120,6 +126,10 @@ class WorkloadJob:
                 )
             if self.ckpt_bytes <= 0:
                 raise ValueError("ckpt_interval_s > 0 requires ckpt_bytes > 0")
+        if self.cache_fraction is not None and not 0.0 < self.cache_fraction <= 1.0:
+            raise ValueError(
+                f"cache_fraction must be in (0, 1], got {self.cache_fraction}"
+            )
 
 
 @dataclass
@@ -500,14 +510,22 @@ class ClusterScheduler:
                 cnodes = [self.topology.node(i) for i in spec.cache_node_ids]
             else:
                 # chunk-rounded, replication-inclusive — what admit() charges
+                # (scaled down when the job asks for fractional caching)
                 need = self.cache.bytes_needed(ds)
+                if spec.cache_fraction is not None:
+                    need *= spec.cache_fraction
                 cnodes = self.placement.choose_cache_nodes(need, near=nodes)
                 if not cnodes:
                     # every node is full: stripe over the whole cluster and
                     # let admit() evict its way to capacity
                     cnodes = list(self.topology.nodes)
             try:
-                self.cache.admit(ds, cnodes, on_demand=(spec.fill == "ondemand"))
+                self.cache.admit(
+                    ds, cnodes,
+                    on_demand=(spec.fill == "ondemand"),
+                    fraction=spec.cache_fraction,
+                    degrade_to_partial=spec.allow_partial,
+                )
                 rec.admitted_cold = True
                 if spec.fill == "prepopulated":
                     self.cache.mark_filled(ds)

@@ -504,6 +504,15 @@ class HoardFS:
             "migrating_chunks": sum(
                 self.cache.store.migrating_chunks(ds) for ds in self.cache.store.manifests
             ),
+            # partial caching (ISSUE 7): datasets resident as a chunk subset.
+            # The per-dataset rows below carry the honest resident_fraction
+            # and chunk_heat_mean — a PARTIAL dataset never reports as fully
+            # cached (fill_progress < 1.0 reflects the non-resident chunks).
+            "partial_datasets": sum(
+                1
+                for ds in self.cache.store.manifests
+                if self.cache.store.resident_fraction(ds) < 1.0
+            ),
             "datasets": self.cache.ls(),
         }
 

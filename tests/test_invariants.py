@@ -79,7 +79,7 @@ def _assert_counters_match(store, history):
 
 def _apply_op(clock, topo, store, cache, v):
     """Decode one integer into an operation; returns a readable trace entry."""
-    op = v % 8
+    op = v % 11
     ds = "abcd"[(v >> 3) % 4]
     node = (v >> 5) % N_NODES
     clock.now += 1.0                                 # distinct LRU timestamps
@@ -116,16 +116,70 @@ def _apply_op(clock, topo, store, cache, v):
             return f"drain({ds},{node})"
         return None
     if op == 6:                                      # whole-dataset eviction
-        if entry is not None and entry.state in (CacheState.CACHED, CacheState.FILLING):
+        if entry is not None and entry.state in (
+            CacheState.CACHED, CacheState.FILLING, CacheState.PARTIAL
+        ):
             cache.evict(ds)
             return f"evict({ds})"
         return None
-    # op == 7: delete from cache AND registry, then re-register (keeps the
-    # dataset pool stable so later ops can re-admit it)
-    if entry is not None:
-        cache.delete(ds)
-        cache.register(DatasetSpec(ds, f"nfs://{ds}", SIZES[ds], 100))
-        return f"delete({ds})"
+    if op == 7:
+        # delete from cache AND registry, then re-register (keeps the
+        # dataset pool stable so later ops can re-admit it)
+        if entry is not None:
+            cache.delete(ds)
+            cache.register(DatasetSpec(ds, f"nfs://{ds}", SIZES[ds], 100))
+            return f"delete({ds})"
+        return None
+    if op == 8:                                      # fractional admission
+        if entry is not None and entry.state is CacheState.REGISTERED:
+            n_sub = 2 + (v >> 7) % 3
+            try:
+                cache.admit(
+                    ds, topo.nodes[:n_sub],
+                    on_demand=bool((v >> 9) & 1), fraction=0.5,
+                )
+                return f"admit_partial({ds},nodes={n_sub})"
+            except CacheFullError:
+                return f"admit_partial({ds})->full"
+        return None
+    if op == 9:                                      # chunk-granular eviction
+        if entry is None or ds not in store.manifests:
+            return None
+        man = store.manifests[ds]
+        # optionally dirty a filled chunk first: chunk-granular eviction must
+        # never victimise a chunk whose bytes exist only in the cache tier
+        if (v >> 7) & 1:
+            filled = [
+                c for c, reps in enumerate(man.chunk_nodes)
+                if reps and man.is_filled(c)
+            ]
+            if filled:
+                c = filled[(v >> 8) % len(filled)]
+                writer = man.chunk_nodes[c][0]
+                store.write_pending(ds, c, 0, 10, writer)
+                store.commit_writes(ds, [c], writer)
+        dirty = set(store.dirty_chunks(ds))
+        if (v >> 10) & 1:
+            # reader-pinned datasets refuse chunk eviction outright
+            cache.acquire(ds)
+            assert cache.evict_chunks(ds, man.chunk_bytes) == 0
+            cache.release(ds)
+        else:
+            cache.evict_chunks(ds, ((v >> 11) % 3 + 1) * man.chunk_bytes)
+        for c in dirty:
+            assert man.chunk_nodes[c], (
+                f"evict_chunks({ds}) demoted dirty chunk {c}"
+            )
+            assert man.is_filled(c)
+            store.mark_flushed(ds, c)                # restore evictability
+        return f"evict_chunks({ds})"
+    # op == 10: chunk access (decayed heat used by partial admission + LRU)
+    if ds in store.manifests:
+        man = store.manifests[ds]
+        store.note_chunk_access(
+            ds, np.asarray([(v >> 7) % man.n_chunks], dtype=np.int64)
+        )
+        return f"touch_chunk({ds})"
     return None
 
 

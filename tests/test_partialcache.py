@@ -1,0 +1,329 @@
+"""Partial caching (ISSUE 7): fractional admission, chunk-granular LRU,
+heat-guided residency, and the admission/fill accounting bugs the feature
+exposed.
+
+Covers the tentpole state machine (REGISTERED -> FILLING -> PARTIAL <->
+FILLING -> CACHED), the chunk-eviction safety guards (dirty / pinned /
+reader-pinned chunks are never victims), the degraded-admission path, and
+the two satellite regressions: prefetch flow sizing (chunk-padded, so
+prepop and on-demand fills move *identical* remote bytes) and the
+CacheFullError messages that name unflushed writes as the blocker.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    CacheFullError,
+    CacheManager,
+    CacheState,
+    DatasetSpec,
+    SimClock,
+    StripeError,
+    StripeStore,
+    Topology,
+    TopologyConfig,
+)
+from repro.core.calibration import PAPER
+from repro.core.prefetch import FillTracker, PrefetchScheduler
+
+IPC = 4            # items per chunk
+ITEM_B = 100
+CHUNK_B = IPC * ITEM_B
+
+
+def _cluster(n_items=24, capacity=1e9, n_nodes=4, replication=1, root=None):
+    """6 chunks x 400 B by default; capacity large unless a test shrinks it."""
+    clock = SimClock()
+    topo = Topology(TopologyConfig(nodes_per_rack=n_nodes), clock)
+    store = StripeStore(topo, root=root)
+    cache = CacheManager(
+        topo, store, clock,
+        capacity_per_node=capacity, items_per_chunk=IPC, replication=replication,
+    )
+    cache.register(DatasetSpec("ds", "nfs://ds", n_items, ITEM_B))
+    return clock, topo, store, cache
+
+
+def _fill_resident(store, cache, ds="ds"):
+    """Land every resident chunk through the real fill callback chain."""
+    man = store.manifests[ds]
+    for c in range(man.n_chunks):
+        if man.chunk_nodes[c] and not man.is_filled(c):
+            store.put_chunk(ds, c)
+            cache.note_chunk_filled(ds)
+
+
+# ------------------------------------------------------------ fractional admit
+def test_fractional_admit_reserves_and_charges_only_the_subset():
+    clock, topo, store, cache = _cluster()
+    cache.admit("ds", topo.nodes[:2], fraction=0.5)     # 6 chunks -> k=3
+    man = store.manifests["ds"]
+    resident = [c for c in range(man.n_chunks) if man.chunk_nodes[c]]
+    assert len(resident) == 3
+    # a never-read dataset has uniform (zero) heat: deterministic prefix wins
+    assert resident == [0, 1, 2]
+    assert sum(store.node_usage.values()) == 3 * CHUNK_B
+    assert store.resident_fraction("ds") == pytest.approx(0.5)
+    # at least one chunk is always cached, even for tiny fractions
+    cache.evict("ds")
+    cache.admit("ds", topo.nodes[:2], fraction=0.01)
+    assert store.manifests["ds"].n_resident == 1
+
+
+def test_fraction_out_of_range_rejected():
+    clock, topo, store, cache = _cluster()
+    for bad in (0.0, -0.5, 1.5):
+        with pytest.raises(ValueError, match="fraction"):
+            cache.admit("ds", topo.nodes[:2], fraction=bad)
+
+
+def test_resident_chunks_subset_validated_by_store():
+    clock, topo, store, cache = _cluster()
+    with pytest.raises(StripeError):
+        store.create("ds", 24, ITEM_B, topo.nodes[:2], items_per_chunk=IPC,
+                     resident_chunks=[99])
+    with pytest.raises(StripeError):
+        store.create("ds", 24, ITEM_B, topo.nodes[:2], items_per_chunk=IPC,
+                     resident_chunks=[])
+
+
+def test_degrade_to_partial_caches_what_fits():
+    # 2 nodes x 450 B = 900 B free; 6 chunks need 2400 B -> only 2 fit
+    clock, topo, store, cache = _cluster(capacity=450, n_nodes=2)
+    with pytest.raises(CacheFullError):
+        cache.admit("ds", topo.nodes[:2])
+    entry = cache.admit("ds", topo.nodes[:2], degrade_to_partial=True)
+    assert entry.state is CacheState.FILLING
+    assert store.manifests["ds"].n_resident == 2
+    assert cache.free_bytes(topo.nodes[:2]) >= 0
+    cache.mark_filled("ds")
+    assert entry.state is CacheState.PARTIAL        # never CACHED at 2/6
+
+
+def test_heat_guides_partial_admission_and_survives_eviction():
+    clock, topo, store, cache = _cluster()
+    cache.admit("ds", topo.nodes[:2])
+    for _ in range(5):
+        store.note_chunk_access("ds", np.asarray([3, 5], dtype=np.int64))
+    cache.evict("ds")                               # heat must outlive the manifest
+    cache.admit("ds", topo.nodes[:2], fraction=1 / 3)   # k=2 -> hottest two
+    man = store.manifests["ds"]
+    assert [c for c in range(man.n_chunks) if man.chunk_nodes[c]] == [3, 5]
+
+
+def test_locate_batch_bumps_chunk_heat():
+    clock, topo, store, cache = _cluster()
+    cache.admit("ds", topo.nodes[:2])
+    cache.mark_filled("ds")
+    before = store.chunk_heat("ds").copy()
+    store.locate_batch("ds", np.asarray([8, 9], dtype=np.int64), topo.nodes[0])
+    after = store.chunk_heat("ds")
+    assert after[2] > before[2]                     # items 8-9 live in chunk 2
+    assert after[0] == before[0]
+
+
+# ------------------------------------------------- state machine (satellite 3)
+def test_partial_fill_never_reaches_cached_and_promotion_completes_it():
+    clock, topo, store, cache = _cluster()
+    entry = cache.admit("ds", topo.nodes[:2], on_demand=True, fraction=0.5)
+    assert entry.state is CacheState.FILLING
+    man = store.manifests["ds"]
+    # landing all but one resident chunk keeps FILLING
+    store.put_chunk("ds", 0)
+    cache.note_chunk_filled("ds")
+    store.put_chunk("ds", 1)
+    cache.note_chunk_filled("ds")
+    assert entry.state is CacheState.FILLING
+    # the last resident chunk flips to PARTIAL — not CACHED (the ISSUE 7 bug)
+    store.put_chunk("ds", 2)
+    cache.note_chunk_filled("ds")
+    assert entry.state is CacheState.PARTIAL
+    assert not cache.is_cached("ds")
+    assert store.resident_filled_fraction("ds") >= 1.0
+
+    # chunk-granular eviction keeps it PARTIAL with fewer residents
+    freed = cache.evict_chunks("ds", CHUNK_B)
+    assert freed == CHUNK_B
+    assert entry.state is CacheState.PARTIAL
+    assert man.n_resident == 2
+
+    # promotion re-opens the fill; landing everything reaches CACHED
+    granted = cache.promote_chunks("ds")
+    assert entry.state is CacheState.FILLING
+    assert sorted(granted) == sorted(
+        c for c in range(man.n_chunks) if man.chunk_nodes[c] and not man.is_filled(c)
+    )
+    _fill_resident(store, cache)
+    assert entry.state is CacheState.CACHED
+    assert store.resident_fraction("ds") == pytest.approx(1.0)
+    assert sum(store.node_usage.values()) == man.n_chunks * CHUNK_B
+
+
+def test_prefetch_of_fractional_admission_lands_in_partial():
+    clock, topo, store, cache = _cluster()
+    done = cache.prefetch("ds", topo.nodes[:2], fraction=0.5)
+    clock.run()
+    assert done.fired
+    assert cache.entries["ds"].state is CacheState.PARTIAL
+
+
+# ----------------------------------------------------- chunk-eviction guards
+def test_evict_chunks_skips_dirty_chunks():
+    clock, topo, store, cache = _cluster()
+    cache.admit("ds", topo.nodes[:2])
+    cache.mark_filled("ds")
+    man = store.manifests["ds"]
+    writer = man.chunk_nodes[0][0]
+    store.write_pending("ds", 0, 0, 10, writer)
+    store.commit_writes("ds", [0], writer)
+    # chunk 0 is coldest by index tie-break, but dirty -> chunk 1 goes instead
+    freed = cache.evict_chunks("ds", CHUNK_B)
+    assert freed == CHUNK_B
+    assert man.chunk_nodes[0] and man.is_filled(0)
+    assert not man.chunk_nodes[1]
+
+
+def test_evict_chunks_refuses_pinned_and_reader_pinned_datasets():
+    clock, topo, store, cache = _cluster()
+    cache.admit("ds", topo.nodes[:2])
+    cache.mark_filled("ds")
+    cache.acquire("ds")
+    assert cache.evict_chunks("ds", CHUNK_B) == 0
+    cache.release("ds")
+    cache.pin("ds")
+    assert cache.evict_chunks("ds", CHUNK_B) == 0
+    cache.unpin("ds")
+    assert cache.evict_chunks("ds", CHUNK_B) == CHUNK_B
+
+
+def test_partial_dataset_is_whole_dataset_evictable_and_deletable():
+    clock, topo, store, cache = _cluster()
+    cache.admit("ds", topo.nodes[:2], fraction=0.5)
+    cache.mark_filled("ds")
+    assert cache.entries["ds"].state is CacheState.PARTIAL
+    cache.evict("ds")
+    assert cache.entries["ds"].state is CacheState.REGISTERED
+    cache.admit("ds", topo.nodes[:2], fraction=0.5)
+    cache.mark_filled("ds")
+    cache.delete("ds")
+    assert "ds" not in cache.entries and "ds" not in store.manifests
+
+
+# ------------------------------------------------------- read path / payloads
+def test_read_item_serves_non_resident_chunks_from_remote(tmp_path):
+    clock, topo, store, cache = _cluster(root=str(tmp_path / "full"))
+    cache.admit("ds", topo.nodes[:2], materialize=True)
+    cache.mark_filled("ds")
+    expected = store.read_item("ds", 20, topo.nodes[0])     # chunk 5, resident
+
+    clock2, topo2, store2, cache2 = _cluster(root=str(tmp_path / "part"))
+    cache2.admit("ds", topo2.nodes[:2], materialize=True, fraction=0.5)
+    cache2.mark_filled("ds")
+    man2 = store2.manifests["ds"]
+    assert not man2.chunk_nodes[5]                          # non-resident
+    assert store2.read_item("ds", 20, topo2.nodes[0]) == expected
+
+
+def test_put_chunk_is_a_noop_for_non_resident_chunks():
+    clock, topo, store, cache = _cluster()
+    cache.admit("ds", topo.nodes[:2], on_demand=True, fraction=0.5)
+    assert store.put_chunk("ds", 5) is False                # no replica to land on
+    assert not store.manifests["ds"].is_filled(5)
+
+
+def test_ls_reports_residency_and_heat():
+    clock, topo, store, cache = _cluster()
+    cache.admit("ds", topo.nodes[:2], fraction=0.5)
+    cache.mark_filled("ds")
+    store.note_chunk_access("ds", np.asarray([0], dtype=np.int64))
+    (row,) = cache.ls()
+    assert row["resident_fraction"] == pytest.approx(0.5)
+    assert row["chunk_heat_mean"] > 0.0
+
+
+# ------------------------------------------- prefetch flow sizing (satellite 1)
+def test_prepop_and_ondemand_fills_move_identical_remote_bytes():
+    """A 10-item dataset over 4-item chunks pads to 3 full chunks; the
+    prefetch flows must move the same chunk-padded byte count the on-demand
+    fill plane does (observable on the shared remote NIC)."""
+    n_chunks = 3
+    clock, topo, store, cache = _cluster(n_items=10)
+    done = cache.prefetch("ds", topo.nodes[:2])
+    clock.run()
+    assert done.fired and cache.entries["ds"].state is CacheState.CACHED
+    prepop_bytes = topo.remote_nic.busy_bytes
+    assert prepop_bytes == pytest.approx(n_chunks * CHUNK_B)
+
+    clock2, topo2, store2, cache2 = _cluster(n_items=10)
+    cache2.admit("ds", topo2.nodes[:2], on_demand=True)
+    tracker = FillTracker(clock2, topo2, cache2, "ds")
+    sched = PrefetchScheduler(tracker, max_inflight=2)
+    sched.start(np.arange(10, dtype=np.int64))
+    clock2.run()
+    assert cache2.entries["ds"].state is CacheState.CACHED
+    assert topo2.remote_nic.busy_bytes == pytest.approx(prepop_bytes)
+
+
+# ------------------------------------------- CacheFullError text (satellite 2)
+def _full_cluster_with(dirty: bool, pinned: bool):
+    clock = SimClock()
+    topo = Topology(TopologyConfig(nodes_per_rack=2), clock)
+    store = StripeStore(topo)
+    cache = CacheManager(
+        topo, store, clock, capacity_per_node=1300, items_per_chunk=IPC
+    )
+    cache.register(DatasetSpec("a", "nfs://a", 24, ITEM_B))
+    cache.register(DatasetSpec("b", "nfs://b", 24, ITEM_B))
+    cache.admit("a", topo.nodes)
+    cache.mark_filled("a")
+    if dirty:
+        writer = store.manifests["a"].chunk_nodes[0][0]
+        store.write_pending("a", 0, 0, 10, writer)
+        store.commit_writes("a", [0], writer)
+    if pinned:
+        cache.pin("a")
+    return topo, store, cache
+
+
+def test_cache_full_error_names_unflushed_writes_as_the_blocker():
+    topo, store, cache = _full_cluster_with(dirty=True, pinned=False)
+    with pytest.raises(CacheFullError) as exc:
+        cache.admit("b", topo.nodes)
+    msg = str(exc.value)
+    assert "unflushed writes" in msg
+    assert "WritePlane.drain" in msg
+
+
+def test_cache_full_error_stays_quiet_when_writes_are_not_the_blocker():
+    topo, store, cache = _full_cluster_with(dirty=False, pinned=True)
+    with pytest.raises(CacheFullError) as exc:
+        cache.admit("b", topo.nodes)
+    msg = str(exc.value)
+    assert "drain" not in msg and "unflushed" not in msg
+
+
+# ----------------------------------------------------- end-to-end (tentpole)
+def test_scenario_runs_with_a_half_resident_dataset():
+    """A cache sized for half the dataset degrades to PARTIAL and still
+    completes an epoch: resident chunks serve from the stripes, the rest
+    read through to the remote store every time."""
+    import dataclasses
+
+    from repro.core.cluster import run_scenario
+
+    cal = dataclasses.replace(
+        PAPER, dataset_bytes=16 * 1024 * 1024.0, dataset_items=16384,
+        batch_items=512,
+    )
+    # 4 chunks x 4 MiB (default 4096-item chunks); 4 x 2.2 MiB caches 2 chunks
+    res = run_scenario(
+        "hoard", epochs=1, n_jobs=1, cal=cal, fill="ondemand",
+        capacity_per_node=2.2 * 1024 * 1024, allow_partial=True,
+    )
+    assert res.store.resident_fraction("imagenet") == pytest.approx(0.5)
+    assert len(res.jobs) == 1 and res.jobs[0].epoch_times[0] > 0
+    topo = res.store.topology
+    # 2 chunks filled once + 2 chunks read through = the whole dataset's
+    # bytes crossed the remote NIC at least once
+    assert topo.remote_nic.busy_bytes >= cal.dataset_bytes * 0.99
