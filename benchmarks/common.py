@@ -55,9 +55,40 @@ def timed(fn):
     return out, (time.time() - t0) * 1e6
 
 
-def epoch_profile(backend: str, *, epochs: int = 3, n_jobs: int = 4, **kw):
-    """(startup_s, epoch1_s, steady_s) mean across jobs."""
+def record_stall_fractions(bench: str, prefix: str, jobs) -> dict[str, float]:
+    """Record mean per-class stall fractions across ``jobs`` (ISSUE 8).
+
+    Every job's wall-clock decomposes into the telemetry stall taxonomy
+    (``JobResult.stall_breakdown``); the mean fraction per class goes into
+    the benchmark's BENCH_*.json as ``<prefix>stall_<class>``.  "compute"
+    regresses when it *shrinks* (the GPU got idler), every other class when
+    it *grows* (a stall got worse).  Returns the recorded means.
+    """
+    agg: dict[str, float] = {}
+    n = 0
+    for j in jobs:
+        n += 1
+        for cls, f in j.stall_fractions().items():
+            agg[cls] = agg.get(cls, 0.0) + f
+    if n == 0:
+        return {}
+    means = {cls: s / n for cls, s in sorted(agg.items())}
+    for cls, f in means.items():
+        better = "higher" if cls == "compute" else "lower"
+        record_metric(bench, f"{prefix}stall_{cls}", f, better=better)
+    return means
+
+
+def epoch_profile(backend: str, *, epochs: int = 3, n_jobs: int = 4, bench=None, **kw):
+    """(startup_s, epoch1_s, steady_s) mean across jobs.
+
+    ``bench`` attaches the jobs' mean stall fractions to that benchmark's
+    BENCH_*.json (as ``<backend>_stall_<class>``) — the stall attribution
+    rides along with every epoch profile a paper table takes.
+    """
     res = run_scenario(backend, epochs=epochs, n_jobs=n_jobs, **kw)
+    if bench is not None:
+        record_stall_fractions(bench, f"{backend}_", res.jobs)
     su = sum(j.startup_s for j in res.jobs) / len(res.jobs)
     e = res.mean_epoch_times
     return res, su, e[0], e[-1]

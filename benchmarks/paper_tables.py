@@ -70,7 +70,7 @@ def table3_projection():
     rows, lines = [], ["Table 3 — speedup over REM at n epochs"]
     profs = {}
     for b in ("rem", "nvme", "hoard"):
-        (res, su, e1, st), us = timed(lambda b=b: epoch_profile(b))
+        (res, su, e1, st), us = timed(lambda b=b: epoch_profile(b, bench="table3"))
         profs[b] = (su, e1, st)
         rows.append(Row(f"table3/profile_{b}", us, f"e1={e1:.0f}s;steady={st:.0f}s"))
         # simulated (deterministic) epoch profile: the CI perf-trajectory gate
@@ -175,6 +175,44 @@ def table5_uplink():
         lines.append(f"  {int(frac*100):3d}% misplaced -> {u*100:4.0f}% up-link")
         record_metric("table5", f"uplink_frac_misplaced{int(frac*100)}", u, better="lower")
     lines.append("  (paper: 5/9/13/17%)")
+
+    # ---- mechanistic companion: the measured per-link traffic matrix.  Two
+    # misplaced jobs (compute on rack 1, stripes on rack 0) drive every peer
+    # stripe read across the TOR up-links; ClusterMetrics.traffic_matrix()
+    # aggregates the per-job link counters into the Table-5-style view.
+    def run_tm():
+        nper = 4
+        res = run_scenario(
+            "hoard", epochs=2, n_jobs=2,
+            topo_cfg=TopologyConfig(nodes_per_rack=nper, racks_per_pod=2),
+            cache_nodes=[0, 1, 2, 3], job_nodes=[4, 5], prefetch=True,
+        )
+        tm = res.metrics.traffic_matrix()
+        racks: dict[tuple[int, int], float] = {}
+        for (src, dst), b in tm.items():
+            key = (src // nper, dst // nper)
+            racks[key] = racks.get(key, 0.0) + b
+        return res, tm, racks
+
+    (res_tm, tm, racks), us = timed(run_tm)
+    total = sum(tm.values())
+    cross = sum(b for (sr, dr), b in racks.items() if sr != dr)
+    steady = res_tm.mean_epoch_times[-1]
+    # mean rate the cross-rack reads put on the 320 Gb/s up-link pair
+    uplink_frac = (cross / 2 / max(res_tm.sim_seconds, 1e-9)) / topo.cfg.tor_uplink_bw
+    lines.append("  measured traffic matrix (2 misplaced jobs, rack1 -> rack0 stripes):")
+    for (sr, dr), b in sorted(racks.items()):
+        lines.append(f"    rack{sr} -> rack{dr}  {b/1e9:8.1f} GB")
+    lines.append(
+        f"    cross-rack {cross/1e9:.1f} GB of {total/1e9:.1f} GB peer traffic"
+        f"  (~{uplink_frac*100:.1f}% of one up-link over the run)"
+    )
+    rows.append(
+        Row("table5/traffic_matrix", us,
+            f"cross_rack_GB={cross/1e9:.1f};uplink_frac={uplink_frac:.3f};steady={steady:.0f}s")
+    )
+    record_metric("table5", "cross_rack_bytes", cross, better="lower")
+    record_metric("table5", "cross_rack_fraction", cross / max(total, 1e-9), better="lower")
     return rows, lines
 
 
@@ -203,7 +241,7 @@ def headline_repro():
     for b, kw in (("rem", {}), ("hoard", {"replication": 2})):
         (res, su, e1, st), us = timed(
             lambda b=b, kw=kw: epoch_profile(
-                b, epochs=3, n_jobs=4, topo_cfg=topo_cfg, cal=cal, **kw
+                b, epochs=3, n_jobs=4, topo_cfg=topo_cfg, cal=cal, bench="headline", **kw
             )
         )
         profs[b], results[b] = (su, e1, st), res

@@ -83,6 +83,8 @@ def main() -> None:
         help="merge this run's metrics into the baseline instead of gating",
     )
     args = ap.parse_args()
+    # benchmarks that emit extra artifacts (Chrome traces) write them here
+    os.environ["BENCH_ARTIFACTS"] = args.out
 
     from . import paper_tables
     from .coldstart import coldstart_rows
@@ -93,6 +95,7 @@ def main() -> None:
     from .partialcache import partialcache_rows
     from .rebalance import rebalance_rows
     from .roofline_table import roofline_rows
+    from .telemetry import telemetry_rows
     from .writeburst import writeburst_rows
 
     benches = [
@@ -113,6 +116,7 @@ def main() -> None:
         ("rebalance", rebalance_rows),
         ("writeburst", writeburst_rows),
         ("partialcache", partialcache_rows),
+        ("telemetry", telemetry_rows),
     ]
     if args.quick:
         benches = [
@@ -120,6 +124,7 @@ def main() -> None:
             if b[0] in (
                 "table3", "table5", "headline", "roofline", "ingest",
                 "fsbench", "rebalance", "writeburst", "partialcache",
+                "telemetry",
             )
         ]
     if args.only:

@@ -1,0 +1,218 @@
+"""Telemetry benchmark (ISSUE 8): the utilization claim as a timeline.
+
+The paper's §5 companion claim — caching roughly doubles GPU utilization
+(REM ~43% busy vs Hoard ~93%) — reproduced from the stall-attribution plane
+instead of an epoch-time ratio: every second of every job's wall-clock is
+classified into the telemetry taxonomy (fill-wait / disk-queue / remote-NIC
+/ write-drain / admission-block / compute), so the utilization figures *are*
+the compute fractions and the remaining time names what the GPU waited on.
+
+Four hard gates (a failed reproduction fails the harness):
+
+1. attribution is complete — per-job stall fractions sum to 1.0 +- 1e-6,
+2. the utilization gain (warm Hoard compute fraction / REM compute
+   fraction) is >= 1.8x, recorded for the baseline perf gate,
+3. tracing overhead — the same scenario traced vs untraced (median
+   wall-clock ratio over order-alternated pairs) stays under 5%,
+4. trace bytes are PYTHONHASHSEED-independent (two subprocesses, sha256).
+
+Also exports a Perfetto-loadable Chrome trace (``TRACE_headline.json``, a
+cold 1-job headline run whose spans show the fill-wait -> disk-queue
+transition) next to the BENCH_*.json artifacts.
+"""
+
+from __future__ import annotations
+
+import gc
+import os
+import subprocess
+import sys
+import time
+from dataclasses import replace
+
+from repro.core import PAPER, run_scenario
+from repro.core.topology import Gb, TopologyConfig
+
+from .common import Row, record_metric, record_stall_fractions, timed
+
+#: scaled-down scenario for the overhead + determinism gates (wall-clock
+#: sensitive / subprocess-run, so it must be fast)
+_SMALL = dict(epochs=2, n_jobs=2, items_per_chunk=64)
+
+
+def _small_cal(items: int = 1024):
+    return replace(
+        PAPER, dataset_bytes=items * 1024.0, dataset_items=items, batch_items=128
+    )
+
+
+_DET_CODE = """\
+import dataclasses, hashlib
+from repro.core import PAPER, run_scenario
+cal = dataclasses.replace(
+    PAPER, dataset_bytes=1024 * 1024.0, dataset_items=1024, batch_items=128
+)
+res = run_scenario(
+    "hoard", fill="ondemand", epochs=2, n_jobs=2, cal=cal,
+    items_per_chunk=64, telemetry=True,
+)
+text = res.telemetry.tracer.export_chrome_trace()
+print(hashlib.sha256(text.encode()).hexdigest())
+"""
+
+
+def _check_complete_attribution(res) -> None:
+    for j in res.jobs:
+        total = sum(j.stall_breakdown.values())
+        if abs(total - j.total_s) > 1e-6 * max(j.total_s, 1.0):
+            raise RuntimeError(
+                f"{j.job_id}: breakdown {total:.6f}s != wall-clock {j.total_s:.6f}s"
+            )
+        frac_sum = sum(j.stall_fractions().values())
+        if abs(frac_sum - 1.0) > 1e-6:
+            raise RuntimeError(f"{j.job_id}: stall fractions sum to {frac_sum!r}")
+
+
+def telemetry_rows():
+    rows = []
+    lines = ["Telemetry — GPU-stall attribution (headline config, 4 jobs x 3 epochs)"]
+    cal = replace(PAPER, dataset_bytes=150 * 1e9)       # headline 150 GB corpus
+    topo_cfg = TopologyConfig(remote_nic_bw=10 * Gb)    # 10 Gb/s REM baseline
+
+    # ---- the three data paths, instrumented end to end ---------------------
+    scenarios = (
+        ("rem", dict(backend="rem")),
+        ("hoard_cold", dict(backend="hoard", fill="ondemand", replication=2)),
+        ("hoard_warm", dict(backend="hoard", fill="prepopulated", replication=2)),
+    )
+    util = {}
+    for name, kw in scenarios:
+        kw = dict(kw)
+        backend = kw.pop("backend")
+
+        def run(backend=backend, kw=kw):
+            return run_scenario(
+                backend, epochs=3, n_jobs=4, topo_cfg=topo_cfg, cal=cal,
+                telemetry=True, **kw,
+            )
+
+        res, us = timed(run)
+        _check_complete_attribution(res)                       # gate 1
+        frs = record_stall_fractions("telemetry", f"{name}_", res.jobs)
+        util[name] = frs.get("compute", 0.0)
+        rows.append(
+            Row(f"telemetry/{name}", us,
+                ";".join(f"{c}={f:.3f}" for c, f in frs.items()))
+        )
+        lines.append(
+            f"  {name:11s} GPU busy {frs.get('compute', 0.0)*100:5.1f}%   stalls: "
+            + "  ".join(
+                f"{c} {f*100:4.1f}%" for c, f in frs.items() if c != "compute"
+            )
+        )
+        # resource timeline behind the number: what the shared links carried
+        sampler = res.telemetry.sampler
+        remote_u = sampler.mean_utilization("remote_nic")
+        nvme_u = sampler.mean_utilization("node0.nvme")
+        lines.append(
+            f"  {'':11s} link timelines: remote NIC {remote_u*100:5.1f}%"
+            f"   node0 NVMe {nvme_u*100:5.1f}%"
+            f"   ({sampler.n_samples()} flow-boundary samples)"
+        )
+
+    # ---- gate 2: the 2x utilization claim, from the attribution itself -----
+    gain = util["hoard_warm"] / max(util["rem"], 1e-12)
+    record_metric("telemetry", "util_gain", gain, better="higher")
+    record_metric("telemetry", "hoard_compute_frac", util["hoard_warm"], better="higher")
+    rows.append(
+        Row("telemetry/util_gain", 0.0,
+            f"rem={util['rem']:.2f};hoard={util['hoard_warm']:.2f};gain={gain:.2f}x")
+    )
+    lines.append(
+        f"  utilization gain {gain:4.2f}x"
+        f"  (rem {util['rem']*100:.0f}% -> hoard {util['hoard_warm']*100:.0f}%,"
+        " paper: ~43% -> ~93%)"
+    )
+    if gain < 1.8:
+        raise RuntimeError(f"utilization gain {gain:.2f}x < 1.8x")
+
+    # ---- Perfetto artifact: a cold 1-job run's full span timeline ----------
+    out_dir = os.environ.get("BENCH_ARTIFACTS", "bench-artifacts")
+    os.makedirs(out_dir, exist_ok=True)
+    trace_res = run_scenario(
+        "hoard", fill="ondemand", epochs=2, n_jobs=1, topo_cfg=topo_cfg,
+        cal=cal, replication=2, telemetry=True,
+    )
+    trace_path = os.path.join(out_dir, "TRACE_headline.json")
+    text = trace_res.telemetry.tracer.export_chrome_trace(trace_path)
+    lines.append(
+        f"  trace: {trace_path}  ({len(trace_res.telemetry.tracer.spans)} spans,"
+        f" {len(text)/1e6:.1f} MB — load in https://ui.perfetto.dev)"
+    )
+    # in-process cross-check: the exporter itself is idempotent
+    if text != trace_res.telemetry.tracer.export_chrome_trace():
+        raise RuntimeError("export_chrome_trace not idempotent")
+
+    # ---- gate 3: tracing overhead < 5% (median of interleaved pairs) -------
+    # ~1 s/run flow-dense scenario: long enough that scheduler noise does not
+    # swamp the per-flow cost being measured.  Each untraced run is paired
+    # with the traced run right after it, so a pair's ratio sees the same
+    # machine-load regime; the median over pairs then drops the pairs a load
+    # spike landed inside (per-run noise on shared runners is easily +-10%,
+    # an order of magnitude above the cost being measured)
+    def wall(telemetry):
+        # a finished scenario is one big dead *cyclic* graph (clock <-> hub
+        # <-> process closures) that refcounting cannot free; collect it now
+        # so its teardown is not charged to whichever later run happens to
+        # trip a generational collection
+        gc.collect()
+        t0 = time.perf_counter()
+        run_scenario(
+            "hoard", fill="ondemand", cal=_small_cal(32768), telemetry=telemetry,
+            **_SMALL,
+        )
+        return time.perf_counter() - t0
+
+    # the headline runs above left a large live heap (10^5-sample series,
+    # span lists); traced runs allocate more and would pay GC sweeps over it
+    # — freeze the existing heap so both series see identical GC behavior
+    del trace_res
+    gc.collect()
+    gc.freeze()
+    try:
+        wall(False)  # warmup (imports, allocator, branch caches)
+        ratios = []
+        for i in range(6):
+            # alternate which side runs first: a slow load/thermal drift then
+            # biases half the pairs up and half down instead of all one way
+            if i % 2 == 0:
+                untraced = wall(False)
+                traced = wall(True)
+            else:
+                traced = wall(True)
+                untraced = wall(False)
+            ratios.append(traced / untraced)
+    finally:
+        gc.unfreeze()
+    ratios.sort()
+    overhead = (ratios[2] + ratios[3]) / 2.0 - 1.0  # median of 6
+    rows.append(Row("telemetry/overhead", 0.0, f"overhead={overhead*100:.1f}%"))
+    lines.append(f"  tracing overhead {overhead*100:+.1f}% wall-clock (gate: <5%)")
+    if overhead > 0.05:
+        raise RuntimeError(f"tracing overhead {overhead*100:.1f}% exceeds 5%")
+
+    # ---- gate 4: trace bytes independent of PYTHONHASHSEED -----------------
+    digests = set()
+    for seed in ("0", "1"):
+        env = dict(os.environ, PYTHONHASHSEED=seed)
+        proc = subprocess.run(
+            [sys.executable, "-c", _DET_CODE],
+            env=env, capture_output=True, text=True, check=True,
+        )
+        digests.add(proc.stdout.strip())
+    if len(digests) != 1:
+        raise RuntimeError(f"trace differs across PYTHONHASHSEED: {digests}")
+    sha = next(iter(digests))
+    rows.append(Row("telemetry/determinism", 0.0, f"sha256={sha[:12]}"))
+    lines.append(f"  trace sha256 {sha[:12]} identical across PYTHONHASHSEED 0/1")
+    return rows, lines

@@ -9,6 +9,7 @@ Public API surface (see DESIGN.md for the paper mapping):
 * ``PlacementEngine`` / ``JobSpec``        — data/compute co-scheduling
 * ``Rebalancer`` / ``MembershipEpoch``     — elastic membership + online re-striping
 * ``HoardLoader`` + backends               — transparent iterators (R4)
+* ``Telemetry`` / ``Tracer``               — flow spans, timelines, stall classes
 * ``run_scenario`` / ``build_cluster``     — one-call experiment harness
 """
 
@@ -44,6 +45,14 @@ from .rebalance import (
     Rebalancer,
 )
 from .simclock import AllOf, Event, Resource, SimClock
+from .telemetry import (
+    STALL_CLASSES,
+    FlowTag,
+    ResourceSampler,
+    Telemetry,
+    Tracer,
+    rollup_stalls,
+)
 from .stripestore import (
     MANIFEST_SCHEMA_VERSION,
     ChunkCorruption,
@@ -72,15 +81,18 @@ __all__ = [
     "AllOf", "CacheEntry", "CacheEvent", "CacheFullError", "CacheManager",
     "CacheState", "ChunkCodec", "ChunkCorruption", "ChunkMove", "ClusterMetrics",
     "ClusterScheduler", "DatasetSpec", "Event", "EvictionPolicy", "FillTracker",
+    "FlowTag",
     "HoardBackend", "HoardLoader", "JobMetrics", "JobRecord", "JobResult",
     "JobSpec", "LRUCache", "LRUStackModel", "LocalCopyBackend",
     "MANIFEST_SCHEMA_VERSION", "MembershipEpoch", "Node", "PAPER", "PagePool",
     "Placement", "PlacementEngine", "PrefetchScheduler", "ReadScheduler",
     "RebalanceError",
-    "RebalancePlan", "Rebalancer", "RemoteBackend", "Resource", "ScenarioResult",
+    "RebalancePlan", "Rebalancer", "RemoteBackend", "Resource", "ResourceSampler",
+    "STALL_CLASSES", "ScenarioResult",
     "SimClock", "StripeDataPlane", "StripeError", "StripeManifest", "StripeStore",
-    "Topology", "TopologyConfig", "TrainingJob", "WRITE_BACK", "WRITE_POLICIES",
+    "Telemetry", "Topology", "TopologyConfig", "Tracer", "TrainingJob",
+    "WRITE_BACK", "WRITE_POLICIES",
     "WRITE_THROUGH", "WorkloadCalibration",
     "WorkloadJob", "WorkloadResult", "WritePlane", "buffer_cache_items",
-    "build_cluster", "run_scenario", "stable_seed",
+    "build_cluster", "rollup_stalls", "run_scenario", "stable_seed",
 ]

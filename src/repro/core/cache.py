@@ -39,6 +39,7 @@ import numpy as np
 
 from .simclock import Event, SimClock
 from .stripestore import StripeStore
+from .telemetry import FlowTag
 from .topology import Node, Topology
 
 
@@ -408,7 +409,11 @@ class CacheManager:
         flows = []
         for node in nodes:
             path = [self.topology.remote_nic, *self.topology.path_from_remote(node)[1:], node.nvme]
-            flows.append(self.clock.transfer(path, per_node))
+            flows.append(
+                self.clock.transfer(
+                    path, per_node, FlowTag("prefetch", f"fill:{dataset_id}", dataset_id)
+                )
+            )
         done = self.clock.all_of(flows)
         # generation guard: a FILLING dataset is evictable (workload engine
         # LRU churn), so by the time this transfer lands the dataset may have
@@ -523,6 +528,20 @@ class CacheManager:
                     self.store.manifests[e.spec.dataset_id].membership_epoch
                     if e.spec.dataset_id in self.store.manifests
                     else None
+                ),
+                # live telemetry (ISSUE 8): flows in flight for this dataset
+                # and bytes traced so far — 0 when no Telemetry hub attached
+                "live_flows": (
+                    self.clock.telemetry.tracer.live_flows(e.spec.dataset_id)
+                    if self.clock.telemetry is not None
+                    and self.clock.telemetry.tracer is not None
+                    else 0
+                ),
+                "traced_bytes": (
+                    self.clock.telemetry.tracer.traced_bytes(e.spec.dataset_id)
+                    if self.clock.telemetry is not None
+                    and self.clock.telemetry.tracer is not None
+                    else 0
                 ),
             }
             for e in self.entries.values()

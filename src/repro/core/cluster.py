@@ -21,6 +21,7 @@ from .metrics import ClusterMetrics
 from .placement import PlacementEngine
 from .simclock import SimClock
 from .stripestore import StripeStore
+from .telemetry import Telemetry
 from .topology import Topology, TopologyConfig
 from .workload import (
     CACHED_BACKENDS,
@@ -42,6 +43,9 @@ class ScenarioResult:
     # the scenario's stripe store — benchmarks read its contention-aware
     # read scheduler (per-replica served bytes, queue telemetry) post-run
     store: Optional[StripeStore] = None
+    # attached telemetry hub (run_scenario(telemetry=True)): flow spans,
+    # resource timelines; None when the scenario ran un-instrumented
+    telemetry: Optional[Telemetry] = None
 
     @property
     def mean_epoch_times(self) -> list[float]:
@@ -104,6 +108,7 @@ def run_scenario(
     cache_fraction: Optional[float] = None,
     allow_partial: bool = False,
     items_per_chunk: Optional[int] = None,
+    telemetry: bool = False,
 ) -> ScenarioResult:
     """Run ``n_jobs`` identical jobs over the chosen data path.
 
@@ -132,6 +137,12 @@ def run_scenario(
     raising ``CacheFullError``; non-resident chunks read through to remote.
     ``items_per_chunk`` overrides the cache's chunk granularity (sweeps over
     small cache:dataset ratios need finer chunks than the 4096-item default).
+
+    ``telemetry=True`` attaches a :class:`~repro.core.telemetry.Telemetry`
+    hub before any job runs: every flow becomes a traced span, the shared
+    fabric links (remote NIC, core, up-links, node NICs/NVMe, disk queues)
+    get busy/queued timelines, and each ``JobResult`` carries its
+    ``stall_breakdown``; the hub is returned on ``ScenarioResult.telemetry``.
     """
     topo_cfg = topo_cfg or TopologyConfig()
     if remote_bw_scale != 1.0:
@@ -150,6 +161,16 @@ def run_scenario(
         capacity_per_node=capacity_per_node, items_per_chunk=items_per_chunk,
     )
     metrics = ClusterMetrics()
+    tel = None
+    if telemetry:
+        sample = [topo.remote_nic, topo.core]
+        sample += [topo.rack_uplink_tx[r] for r in sorted(topo.rack_uplink_tx)]
+        sample += [topo.rack_uplink_rx[r] for r in sorted(topo.rack_uplink_rx)]
+        for n in topo.nodes:
+            sample += [n.nic_tx, n.nic_rx, n.nvme]
+        for nid in sorted(store.readsched.disks):
+            sample += store.readsched.disks[nid]
+        tel = Telemetry(clock, sample=sample)
 
     spec = DatasetSpec("imagenet", "nfs://store/imagenet", cal.dataset_items, int(cal.item_bytes))
     cache.register(spec)
@@ -211,5 +232,6 @@ def run_scenario(
         )
     wl = scheduler.run(jobs)
     return ScenarioResult(
-        backend, wl.jobs, metrics, clock.now, cal, workload=wl, store=store
+        backend, wl.jobs, metrics, clock.now, cal, workload=wl, store=store,
+        telemetry=tel,
     )

@@ -28,6 +28,7 @@ from .calibration import WorkloadCalibration
 from .metrics import JobMetrics
 from .simclock import Event, Resource, SimClock
 from .stripestore import StripeError
+from .telemetry import FlowTag
 from .tiers import LRUStackModel, PagePool, buffer_cache_items
 from .topology import Node, Topology
 
@@ -48,13 +49,22 @@ class _Backend:
     """Common plumbing: per-job client-service resources."""
 
     name = "base"
+    #: stall class charged for startup staging time (telemetry taxonomy)
+    startup_stall_class = "remote-NIC"
 
     def __init__(self, clock: SimClock, topology: Topology, node: Node, cal: WorkloadCalibration):
         self.clock = clock
         self.topology = topology
         self.node = node
         self.cal = cal
-        self.ram = Resource(f"{node.name}.ram_client", cal.ram_bw)
+        self.ram = Resource(f"{node.name}.ram_client", cal.ram_bw, created_at=clock.now)
+        self.metrics: Optional[JobMetrics] = None
+        # dominant stall class of the most recent batch_io call; TrainingJob
+        # snapshots it at issue time to attribute the wait on that batch
+        self.last_io_class = "compute"
+
+    def _owner(self) -> str:
+        return self.metrics.job_id if self.metrics else ""
 
     def epoch_start(self, epoch: int) -> None:  # pragma: no cover - default
         pass
@@ -77,7 +87,7 @@ class RemoteBackend(_Backend):
         mdr: Optional[float] = None, metrics: Optional[JobMetrics] = None,
     ):
         super().__init__(clock, topology, node, cal)
-        self.stream = Resource(f"{node.name}.nfs_stream", cal.rem_miss_bw)
+        self.stream = Resource(f"{node.name}.nfs_stream", cal.rem_miss_bw, created_at=clock.now)
         mdr = cal.default_mdr if mdr is None else mdr
         self.buffer_cache = LRUStackModel(
             cal.dataset_items, buffer_cache_items(mdr, cal.dataset_items)
@@ -89,15 +99,21 @@ class RemoteBackend(_Backend):
         miss_bytes = float((~hits).sum()) * self.cal.item_bytes
         hit_bytes = float(hits.sum()) * self.cal.item_bytes
         flows = []
+        owner = self._owner()
         if miss_bytes:
             path = [self.stream, *self.topology.path_from_remote(self.node)]
-            flows.append(self.clock.transfer(path, miss_bytes))
+            flows.append(
+                self.clock.transfer(path, miss_bytes, FlowTag("remote-miss", owner))
+            )
             if self.metrics:
                 self.metrics.count("remote_bytes", miss_bytes)
         if hit_bytes:
-            flows.append(self.clock.transfer([self.ram], hit_bytes))
+            flows.append(self.clock.transfer([self.ram], hit_bytes, FlowTag("ram-hit", owner)))
             if self.metrics:
                 self.metrics.count("ram_bytes", hit_bytes)
+        self.last_io_class = (
+            "remote-NIC" if miss_bytes else ("disk-queue" if hit_bytes else "compute")
+        )
         return self.clock.all_of(flows)
 
 
@@ -137,21 +153,27 @@ class LocalCopyBackend(_Backend):
         path = [*self.topology.path_from_remote(self.node), self.node.nvme]
         if self.metrics:
             self.metrics.count("remote_bytes", self.cal.dataset_bytes)
-        return self.clock.transfer(path, self.cal.dataset_bytes)
+        return self.clock.transfer(
+            path, self.cal.dataset_bytes, FlowTag("prestage", self._owner())
+        )
 
     def batch_io(self, item_ids, epoch, positions) -> Event:
         hits = self.buffer_cache.access_epoch_batch(item_ids, epoch, positions)
         miss_bytes = float((~hits).sum()) * self.cal.item_bytes
         hit_bytes = float(hits.sum()) * self.cal.item_bytes
         flows = []
+        owner = self._owner()
         if miss_bytes:
-            flows.append(self.clock.transfer([self.node.nvme], miss_bytes))
+            flows.append(
+                self.clock.transfer([self.node.nvme], miss_bytes, FlowTag("nvme-read", owner))
+            )
             if self.metrics:
                 self.metrics.count("nvme_bytes", miss_bytes)
         if hit_bytes:
-            flows.append(self.clock.transfer([self.ram], hit_bytes))
+            flows.append(self.clock.transfer([self.ram], hit_bytes, FlowTag("ram-hit", owner)))
             if self.metrics:
                 self.metrics.count("ram_bytes", hit_bytes)
+        self.last_io_class = "disk-queue" if flows else "compute"
         return self.clock.all_of(flows)
 
 
@@ -212,9 +234,12 @@ class StripeDataPlane:
         self.cal = cal
         self.cache = cache
         self.dataset_id = dataset_id
-        self.client = Resource(f"{node.name}.gpfs_client", 1.0)  # seconds/second
+        # seconds/second of client-daemon CPU
+        self.client = Resource(f"{node.name}.gpfs_client", 1.0, created_at=clock.now)
         self.pagepool = pagepool
         self.metrics = metrics
+        # dominant stall class of the most recent ondemand_io call (telemetry)
+        self.last_io_class = "compute"
         # on-demand fill plane (prefetch.FillTracker) + optional scheduler
         # to heartbeat consumer progress to (prefetch.PrefetchScheduler)
         self.fill_plane = fill_plane
@@ -227,6 +252,9 @@ class StripeDataPlane:
 
     def _manifest(self):
         return self.cache.store.manifests[self.dataset_id]
+
+    def _owner(self) -> str:
+        return self.metrics.job_id if self.metrics else ""
 
     # ---------------------------------------------------------- flow booking
     def stripe_flows(self, items: np.ndarray) -> tuple[list[Event], float]:
@@ -260,7 +288,11 @@ class StripeDataPlane:
             nbytes = float((group == g).sum()) * self.cal.item_bytes
             src = self.topology.node(src_id)
             path = [sched.disks[src_id][disk], *self.topology.path(src, self.node)]
-            flows.append(self.clock.transfer(path, nbytes))
+            flows.append(
+                self.clock.transfer(
+                    path, nbytes, FlowTag("stripe-read", self._owner(), self.dataset_id)
+                )
+            )
             sched.note_read(self.dataset_id, src_id, nbytes)
             if self.metrics:
                 if src.node_id == self.node.node_id:
@@ -279,7 +311,10 @@ class StripeDataPlane:
             served_bytes / self.cal.stripe_rpc_bw + stripe_bytes / self.cal.stripe_move_bw
         )
         if client_seconds > 0:
-            return self.clock.transfer([self.client], client_seconds)
+            return self.clock.transfer(
+                [self.client], client_seconds,
+                FlowTag("client-cpu", self._owner(), self.dataset_id),
+            )
         return None
 
     # ----------------------------------------------------------------- reads
@@ -295,7 +330,8 @@ class StripeDataPlane:
     def _readthrough_stream(self) -> Resource:
         if self._rt_stream is None:
             self._rt_stream = Resource(
-                f"{self.node.name}.remote_miss", self.cal.rem_miss_bw
+                f"{self.node.name}.remote_miss", self.cal.rem_miss_bw,
+                created_at=self.clock.now,
             )
         return self._rt_stream
 
@@ -308,6 +344,7 @@ class StripeDataPlane:
         return self.clock.transfer(
             [self._readthrough_stream(), *self.topology.path_from_remote(self.node)],
             nbytes,
+            FlowTag("read-through", self._owner(), self.dataset_id),
         )
 
     def ondemand_io(self, item_ids, epoch, positions) -> Event:
@@ -360,6 +397,18 @@ class StripeDataPlane:
                 if ev is not None:
                     fill_events.append(ev)
         self.heartbeat(item_ids)
+
+        # dominant stall class, worst first: a batch blocked on a fill is a
+        # fill-wait even if it also read stripes; read-through beats local
+        # stripe/client service; pure pagepool hits cost client CPU only
+        if len(fill_items):
+            self.last_io_class = "fill-wait"
+        elif rt_mask.any():
+            self.last_io_class = "remote-NIC"
+        elif flows:
+            self.last_io_class = "disk-queue"
+        else:
+            self.last_io_class = "compute"
 
         if not len(fill_items):
             return self.clock.all_of(flows)
@@ -439,7 +488,7 @@ class HoardBackend(_Backend):
         super().__init__(clock, topology, node, cal)
         self.cache = cache
         self.dataset_id = dataset_id
-        self.fill_client = Resource(f"{node.name}.afm_fill", cal.fill_bw)
+        self.fill_client = Resource(f"{node.name}.afm_fill", cal.fill_bw, created_at=clock.now)
         mdr = cal.default_mdr if mdr is None else mdr
         n = self.cache.entries[dataset_id].spec.n_items
         self.plane = StripeDataPlane(
@@ -482,7 +531,9 @@ class HoardBackend(_Backend):
         if self.plane.fill_plane is not None or entry.state is CacheState.PARTIAL:
             # on-demand fill in progress, or terminal partial residency:
             # both need the four-class data plane (fill joins / read-through)
-            return self.plane.ondemand_io(item_ids, epoch, positions)
+            ev = self.plane.ondemand_io(item_ids, epoch, positions)
+            self.last_io_class = self.plane.last_io_class
+            return ev
         hits = self.plane.pagepool.access_epoch_batch(item_ids, epoch, positions)
         # chunk residency bounds per-job residency: an AFM fill can only
         # write back where a stripe replica exists, so items of non-resident
@@ -502,7 +553,11 @@ class HoardBackend(_Backend):
             # and target NVMe are also booked so cluster-level contention
             # (many filling jobs) appears mechanistically.
             path = [self.fill_client, *self.topology.path_from_remote(self.node)]
-            flows.append(self.clock.transfer(path, fill_bytes))
+            flows.append(
+                self.clock.transfer(
+                    path, fill_bytes, FlowTag("afm-fill", self._owner(), self.dataset_id)
+                )
+            )
             self._resident[item_ids[fill_mask & chunk_res]] = True
             if self.metrics:
                 self.metrics.count("remote_bytes", fill_bytes)
@@ -517,6 +572,14 @@ class HoardBackend(_Backend):
             flows.append(client)
         if self.metrics and hits.any():
             self.metrics.count("ram_bytes", float(hits.sum()) * self.cal.item_bytes)
+
+        # dominant stall class (worst first) for the AFM miss-path model
+        if fill_bytes:
+            self.last_io_class = "fill-wait"
+        elif flows:
+            self.last_io_class = "disk-queue"
+        else:
+            self.last_io_class = "compute"
 
         if self._resident.all():
             entry = self.cache.entries[self.dataset_id]
@@ -576,10 +639,26 @@ class JobResult:
     epoch_times: list[float] = field(default_factory=list)
     step_times: list[float] = field(default_factory=list)
     startup_s: float = 0.0
+    # seconds per stall class (telemetry.STALL_CLASSES); every accounted
+    # second of the job lands in exactly one class — GPU-busy time is
+    # "compute", everything else names the stage the GPU waited on
+    stall_breakdown: dict[str, float] = field(default_factory=dict)
 
     @property
     def total_s(self) -> float:
         return self.startup_s + sum(self.epoch_times)
+
+    def stall_fractions(self) -> dict[str, float]:
+        """Per-class fraction of accounted time; sums to 1.0 when nonempty."""
+        total = sum(self.stall_breakdown.values())
+        if total <= 0:
+            return {}
+        return {cls: s / total for cls, s in sorted(self.stall_breakdown.items())}
+
+    @property
+    def stalled_s(self) -> float:
+        """Accounted seconds the accelerator sat idle (everything non-compute)."""
+        return sum(s for cls, s in self.stall_breakdown.items() if cls != "compute")
 
     def fps_timeline(self, batch_items: int) -> np.ndarray:
         dt = np.asarray(self.step_times)
@@ -631,6 +710,13 @@ class TrainingJob:
         clock = self.clock
         backend = self.loader.backend
         compute_s = self.cal.compute_time_per_step()
+        tel = clock.telemetry
+        tracer = tel.tracer if tel is not None else None
+        breakdown = self.result.stall_breakdown
+
+        def account(cls: str, dt: float) -> None:
+            if dt > 0:
+                breakdown[cls] = breakdown.get(cls, 0.0) + dt
 
         t0 = clock.now
         startup = backend.startup()
@@ -639,6 +725,7 @@ class TrainingJob:
         elif startup > 0:
             yield clock.sleep(startup)
         self.result.startup_s = clock.now - t0
+        account(getattr(backend, "startup_stall_class", "remote-NIC"), self.result.startup_s)
 
         def batch_stream():
             for epoch in range(self.loader.epochs):
@@ -654,7 +741,10 @@ class TrainingJob:
             if epoch != issued_epoch:
                 backend.epoch_start(epoch)
                 issued_epoch = epoch
-            return epoch, backend.batch_io(ids, epoch, pos)
+            io = backend.batch_io(ids, epoch, pos)
+            # snapshot the batch's dominant service class now: any wait on
+            # this event is attributed to the stage that served the batch
+            return epoch, io, getattr(backend, "last_io_class", "disk-queue")
 
         from collections import deque
 
@@ -673,10 +763,24 @@ class TrainingJob:
         epoch_t0 = clock.now
         last_step_end = clock.now
         while pending:
-            cur_epoch, io = pending.popleft()
+            cur_epoch, io, io_cls = pending.popleft()
+            wait_t0 = clock.now
             yield io                      # this step's data is ready
+            wait = clock.now - wait_t0    # GPU idle: attribute to the io class
+            if wait > 0:
+                account(io_cls, wait)
+                if tracer is not None:
+                    tracer.add_span(
+                        "stall", t0=wait_t0, dur=wait, kind=io_cls, owner=self.job_id
+                    )
             top_up()                      # keep the pipeline full
             yield clock.sleep(compute_s)  # accelerator consumes the batch
+            account("compute", compute_s)
+            if tracer is not None:
+                tracer.add_span(
+                    "step", t0=clock.now - compute_s, dur=compute_s,
+                    kind="compute", owner=self.job_id,
+                )
             now = clock.now
             self.result.step_times.append(now - last_step_end)
             last_step_end = now

@@ -59,12 +59,9 @@ class JobMetrics:
     def epoch_mean_fps(self) -> list[float]:
         """Average fps per epoch (Figures 4 & 5 report these)."""
         out = []
-        prev_t = self.step_stamps[0] - 1e-9 if self.step_stamps else 0.0
-        prev_i = 0
         stamps = np.asarray(self.step_stamps)
         items = np.asarray(self.step_items, dtype=np.float64)
         start_t = 0.0
-        start_idx = 0
         for end_t in self.epoch_stamps:
             mask = (stamps > start_t) & (stamps <= end_t + 1e-9)
             n_items = items[mask].sum()

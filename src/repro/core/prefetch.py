@@ -39,6 +39,7 @@ import numpy as np
 from .cache import CacheManager
 from .metrics import JobMetrics
 from .simclock import Event, Resource, SimClock
+from .telemetry import FlowTag
 from .topology import Topology
 
 
@@ -76,7 +77,9 @@ class FillTracker:
         self.dataset_id = dataset_id
         self.inflight: dict[int, Event] = {}
         self.ingest = (
-            Resource(f"fill_ingest.{dataset_id}", float(ingest_bw)) if ingest_bw else None
+            Resource(f"fill_ingest.{dataset_id}", float(ingest_bw), created_at=clock.now)
+            if ingest_bw
+            else None
         )
         self.metrics = metrics
         self.filled_events = 0          # chunks this tracker landed (for tests)
@@ -154,10 +157,12 @@ class FillTracker:
         replicas = man.chunk_nodes[chunk]
         primary = self.topology.node(replicas[0])
         head = [self.ingest] if self.ingest else []
+        owner = self.metrics.job_id if self.metrics else f"fill:{self.dataset_id}"
         flows = [
             self.clock.transfer(
                 [*head, *self.topology.path_from_remote(primary), primary.nvme],
                 man.chunk_bytes,
+                FlowTag("fill", owner, self.dataset_id, chunk),
             )
         ]
         # replica fan-out: peer copies from the primary (never re-fetched).
@@ -173,6 +178,7 @@ class FillTracker:
                         peer.nvme,
                     ],
                     man.chunk_bytes,
+                    FlowTag("fill-replica", owner, self.dataset_id, chunk),
                 )
             )
         done = self.clock.event()

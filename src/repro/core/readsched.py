@@ -93,7 +93,10 @@ class ReadScheduler:
         cfg = topology.cfg
         self.disks: dict[int, list[Resource]] = {
             n.node_id: [
-                Resource(f"node{n.node_id}.disk{k}", cfg.nvme_bw_per_disk)
+                Resource(
+                    f"node{n.node_id}.disk{k}", cfg.nvme_bw_per_disk,
+                    created_at=self.clock.now,
+                )
                 for k in range(max(1, cfg.nvme_disks_per_node))
             ]
             for n in topology.nodes

@@ -46,6 +46,7 @@ from .cache import CacheManager
 from .metrics import JobMetrics
 from .simclock import Event, Resource, SimClock
 from .stripestore import StripeStore
+from .telemetry import FlowTag
 from .topology import Topology
 
 
@@ -134,7 +135,9 @@ class Rebalancer:
         )
         self.epoch = MembershipEpoch()
         self.migration = (
-            Resource("rebalance.migration_cap", float(migration_bw)) if migration_bw else None
+            Resource("rebalance.migration_cap", float(migration_bw), created_at=clock.now)
+            if migration_bw
+            else None
         )
         self.max_inflight = max(1, int(max_inflight))
         self.metrics = metrics if metrics is not None else JobMetrics("rebalance")
@@ -439,7 +442,9 @@ class Rebalancer:
             ]
             self.metrics.count_link(mv.src, mv.dst, mv.nbytes)
         self.metrics.count("migration_bytes", mv.nbytes)
-        return self.clock.transfer(path, mv.nbytes)
+        return self.clock.transfer(
+            path, mv.nbytes, FlowTag("migration", "rebalance", mv.dataset_id, mv.chunk)
+        )
 
     def _launch(self, plan: RebalancePlan) -> Event:
         """Execute a plan's flow moves with bounded concurrency.

@@ -30,9 +30,9 @@ from typing import Callable, Generator, Iterable, Optional
 class Resource:
     """A shared capacity (bytes/second).  Flows crossing it split it fairly."""
 
-    __slots__ = ("name", "bw", "flows", "busy_bytes")
+    __slots__ = ("name", "bw", "flows", "busy_bytes", "created_at")
 
-    def __init__(self, name: str, bw: float):
+    def __init__(self, name: str, bw: float, *, created_at: float = 0.0):
         if bw <= 0:
             raise ValueError(f"resource {name!r} needs positive bandwidth, got {bw}")
         self.name = name
@@ -43,12 +43,19 @@ class Resource:
         # scheduler would surface as cross-process metric wobble
         self.flows: dict["Flow", None] = {}
         self.busy_bytes = 0.0  # total bytes that crossed this resource
+        self.created_at = float(created_at)  # sim time this resource appeared
 
     def utilization(self, horizon: float) -> float:
-        """Fraction of capacity used over ``horizon`` seconds."""
-        if horizon <= 0:
+        """Fraction of capacity used between creation and ``horizon`` seconds.
+
+        The denominator is the resource's *lifetime* within the horizon, not
+        the whole horizon — a node added mid-sim by ``scale_event`` that is
+        busy from then on reads as 1.0, not as its arrival fraction.
+        """
+        span = horizon - self.created_at
+        if span <= 0:
             return 0.0
-        return min(1.0, (self.busy_bytes / self.bw) / horizon)
+        return min(1.0, (self.busy_bytes / self.bw) / span)
 
     def queued_bytes(self, now: Optional[float] = None) -> float:
         """Bytes still in flight across this resource (its queue depth).
@@ -72,10 +79,19 @@ class Resource:
 
 
 class Flow:
-    __slots__ = ("fid", "path", "size", "remaining", "rate", "event", "settled_at")
+    __slots__ = (
+        "fid", "path", "size", "remaining", "rate", "event", "settled_at", "tag",
+        "trace_rec",
+    )
 
     def __init__(
-        self, fid: int, path: tuple[Resource, ...], nbytes: float, event: "Event", now: float
+        self,
+        fid: int,
+        path: tuple[Resource, ...],
+        nbytes: float,
+        event: "Event",
+        now: float,
+        tag=None,
     ):
         self.fid = fid
         self.path = path
@@ -84,6 +100,8 @@ class Flow:
         self.rate = 0.0
         self.event = event
         self.settled_at = now  # sim-time up to which `remaining` is accurate
+        self.tag = tag  # optional FlowTag (kind/owner/dataset/chunk) for tracing
+        self.trace_rec = None  # span start time, set by an attached Telemetry hub
 
     @property
     def negligible(self) -> bool:
@@ -160,6 +178,10 @@ class SimClock:
         # keys queue-depth memoization in the read scheduler — between bumps
         # at one instant, every Resource's queued_bytes(now) is constant
         self.flow_seq = 0
+        # optional telemetry hub (repro.core.telemetry.Telemetry); when
+        # attached, flow start/finish and settle call back into it
+        # — an un-instrumented run pays one `is None` branch per hook site
+        self.telemetry = None
 
     # ------------------------------------------------------------------ events
     def event(self) -> Event:
@@ -204,8 +226,12 @@ class SimClock:
         return ("sleep", float(dt))
 
     # ---------------------------------------------------------------- transfer
-    def transfer(self, path: Iterable[Resource], nbytes: float) -> Event:
-        """Start a flow of ``nbytes`` across ``path``; returns completion Event."""
+    def transfer(self, path: Iterable[Resource], nbytes: float, tag=None) -> Event:
+        """Start a flow of ``nbytes`` across ``path``; returns completion Event.
+
+        ``tag`` (a :class:`~repro.core.telemetry.FlowTag`) identifies the flow
+        for the telemetry plane; it is inert when no hub is attached.
+        """
         ev = Event(self)
         nbytes = float(nbytes)
         path = tuple(path)
@@ -213,11 +239,13 @@ class SimClock:
             ev.set()
             return ev
         self._settle()
-        flow = Flow(next(self._fid), path, nbytes, ev, self.now)
+        flow = Flow(next(self._fid), path, nbytes, ev, self.now, tag)
         self.flow_seq += 1
         self._flows[flow] = None
         for res in path:
             res.flows[flow] = None
+        if self.telemetry is not None:
+            self.telemetry.flow_started(flow, self.now)
         self._reallocate()
         return ev
 
@@ -231,6 +259,11 @@ class SimClock:
         scheduler samples both, so cross-process bit-reproducibility needs a
         deterministic order.
         """
+        if self.telemetry is not None:
+            # before busy_bytes mutates: lets the sampler record flow marks
+            # from an earlier instant lazily — state cannot have changed in
+            # between, and same-instant boundary bursts get sampled once
+            self.telemetry.settling()
         for flow in self._flows:
             moved = flow.rate * (self.now - flow.settled_at)
             if moved > 0:
@@ -314,6 +347,8 @@ class SimClock:
         self._flows.pop(flow, None)
         for res in flow.path:
             res.flows.pop(flow, None)
+        if self.telemetry is not None:
+            self.telemetry.flow_finished(flow, self.now)
         # defer the event so completions never reenter the solver
         self.schedule(0.0, flow.event.set)
 

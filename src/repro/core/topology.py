@@ -73,26 +73,32 @@ class Topology:
         self.nodes: list[Node] = []
         self.rack_uplink_tx: dict[int, Resource] = {}
         self.rack_uplink_rx: dict[int, Resource] = {}
-        self.core = Resource("core", cfg.core_bw)
-        self.remote_nic = Resource("remote_nic", cfg.remote_nic_bw)
+        t0 = clock.now  # a fabric built mid-sim starts its utilization clock here
+        self.core = Resource("core", cfg.core_bw, created_at=t0)
+        self.remote_nic = Resource("remote_nic", cfg.remote_nic_bw, created_at=t0)
 
         nid = 0
         rid = 0
         for pod in range(cfg.pods):
             for _rack in range(cfg.racks_per_pod):
-                self.rack_uplink_tx[rid] = Resource(f"rack{rid}.up_tx", cfg.tor_uplink_bw)
-                self.rack_uplink_rx[rid] = Resource(f"rack{rid}.up_rx", cfg.tor_uplink_bw)
+                self.rack_uplink_tx[rid] = Resource(
+                    f"rack{rid}.up_tx", cfg.tor_uplink_bw, created_at=t0
+                )
+                self.rack_uplink_rx[rid] = Resource(
+                    f"rack{rid}.up_rx", cfg.tor_uplink_bw, created_at=t0
+                )
                 for _n in range(cfg.nodes_per_rack):
                     self.nodes.append(
                         Node(
                             node_id=nid,
                             rack_id=rid,
                             pod_id=pod,
-                            nic_tx=Resource(f"node{nid}.nic_tx", cfg.nic_bw),
-                            nic_rx=Resource(f"node{nid}.nic_rx", cfg.nic_bw),
+                            nic_tx=Resource(f"node{nid}.nic_tx", cfg.nic_bw, created_at=t0),
+                            nic_rx=Resource(f"node{nid}.nic_rx", cfg.nic_bw, created_at=t0),
                             nvme=Resource(
                                 f"node{nid}.nvme",
                                 cfg.nvme_bw_per_disk * cfg.nvme_disks_per_node,
+                                created_at=t0,
                             ),
                         )
                     )

@@ -50,6 +50,7 @@ from .placement import JobSpec, PlacementEngine
 from .prefetch import FillTracker, PrefetchScheduler
 from .simclock import Event, SimClock
 from .stripestore import StripeStore
+from .telemetry import rollup_stalls
 from .topology import Node, Topology
 from .writeplane import WRITE_POLICIES, ChunkCodec, WritePlane
 
@@ -187,6 +188,15 @@ class WorkloadResult:
         """
         return {ds for _t, ds in self.readmissions()}
 
+    # ------------------------------------------------------ stall telemetry
+    def stall_rollup(self) -> dict:
+        """Cluster-wide GPU-stall attribution over every finished job.
+
+        Aggregates each job's ``JobResult.stall_breakdown`` into
+        ``{"jobs", "seconds", "fractions"}`` (see telemetry.rollup_stalls).
+        """
+        return rollup_stalls(j.stall_breakdown for j in self.jobs)
+
 
 class ClusterScheduler:
     """Drives a mix of :class:`WorkloadJob` s over one simulated cluster.
@@ -287,6 +297,13 @@ class ClusterScheduler:
 
         self.clock.schedule(max(0.0, at - self.clock.now), fire)
         return done
+
+    # ------------------------------------------------------ stall telemetry
+    def stall_rollup(self) -> dict:
+        """Cluster-wide GPU-stall attribution over jobs finished so far."""
+        return rollup_stalls(
+            r.result.stall_breakdown for r in self.records if r.result is not None
+        )
 
     # ----------------------------------------------------------- wake-up bus
     def _turnstile(self) -> Event:
@@ -428,6 +445,13 @@ class ClusterScheduler:
 
         # ---- phase 4: teardown — free GPUs + reader pin, wake queued jobs
         rec.finished = clock.now
+        # stall attribution: time between submission and actually starting
+        # (GPU queue + cache-admission retries) is the GPUs never running at
+        # all — the "admission-block" class of the telemetry taxonomy
+        queued = rec.started - spec.arrival
+        if queued > 0 and rec.result is not None:
+            bd = rec.result.stall_breakdown
+            bd["admission-block"] = bd.get("admission-block", 0.0) + queued
         self._release_nodes(rec)
         if spec.backend == "posix":
             be.close()                      # drop per-handle reader pins
@@ -451,6 +475,11 @@ class ClusterScheduler:
         clock = self.clock
         ds = spec.dataset_id
         self.cache.acquire(ds)
+        # write-path latency attribution: seconds this proc spent blocked on
+        # write_burst (buffer+fsync) and the final drain.  Bursts overlap the
+        # foreground job's compute, so these are *accounted* write-drain
+        # seconds, not extra wall-clock — the stall rollup normalises.
+        wait_s = 0.0
         try:
             while rec.finished is None:
                 yield clock.sleep(spec.ckpt_interval_s)
@@ -458,10 +487,17 @@ class ClusterScheduler:
                     break
                 if not self.cache.is_cached(ds):
                     continue                   # no checkpoints into a mid-fill stripe
+                t0 = clock.now
                 yield wplane.write_burst(spec.ckpt_bytes, lane=lane, n_lanes=n_lanes)
+                wait_s += clock.now - t0
                 rec.ckpt_bursts += 1
+            t0 = clock.now
             yield wplane.drain()
+            wait_s += clock.now - t0
         finally:
+            if wait_s > 0 and rec.result is not None:
+                bd = rec.result.stall_breakdown
+                bd["write-drain"] = bd.get("write-drain", 0.0) + wait_s
             self.cache.release(ds)
             self._notify()
 

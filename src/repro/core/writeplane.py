@@ -36,6 +36,7 @@ from typing import TYPE_CHECKING, Optional
 
 from .metrics import JobMetrics
 from .simclock import Event, Resource, SimClock
+from .telemetry import FlowTag
 from .topology import Node, Topology
 
 if TYPE_CHECKING:  # pragma: no cover - typing only
@@ -119,10 +120,15 @@ class WritePlane:
         # per-writer compression CPU: a dedicated service, not a fabric link —
         # FanStore burns client cores, not the network, to shrink transfers
         self._cpu = (
-            Resource(f"{writer.name}.codec.{dataset_id}", self.codec.compress_bw)
+            Resource(
+                f"{writer.name}.codec.{dataset_id}", self.codec.compress_bw,
+                created_at=clock.now,
+            )
             if self.codec.enabled
             else None
         )
+        # owner string for this plane's flow tags (telemetry)
+        self._tag_owner = metrics.job_id if metrics else f"write:{dataset_id}"
         self._flusher_active = False
         self._drain_waiters: list[Event] = []
         self._burst_cursor = 0
@@ -151,7 +157,9 @@ class WritePlane:
             total += nbytes
         if self.metrics:
             self.metrics.count("write_bytes", total)
-        return self.clock.transfer([self.writer.nvme], total)
+        return self.clock.transfer(
+            [self.writer.nvme], total, FlowTag("write-buffer", self._tag_owner, self.dataset_id)
+        )
 
     # ------------------------------------------------------------------ fsync
     def fsync(self) -> Event:
@@ -176,11 +184,21 @@ class WritePlane:
             wire = self.codec.wire_bytes(man.chunk_bytes)
             if self._cpu is not None:
                 # compress once per chunk on the writer's CPU (payload bytes)
-                flows.append(self.clock.transfer([self._cpu], man.chunk_bytes))
+                flows.append(
+                    self.clock.transfer(
+                        [self._cpu], man.chunk_bytes,
+                        FlowTag("compress", self._tag_owner, self.dataset_id, c),
+                    )
+                )
             for node_id in replicas:
                 if node_id == self.writer.node_id:
                     # local commit: buffer -> chunk file on the same NVMe
-                    flows.append(self.clock.transfer([self.writer.nvme], man.chunk_bytes))
+                    flows.append(
+                        self.clock.transfer(
+                            [self.writer.nvme], man.chunk_bytes,
+                            FlowTag("write-commit", self._tag_owner, self.dataset_id, c),
+                        )
+                    )
                 else:
                     # peer replication: a *read* of the buffered chunk from
                     # the writer's per-disk read queue, across the network,
@@ -195,6 +213,7 @@ class WritePlane:
                                 peer.nvme,
                             ],
                             wire,
+                            FlowTag("write-replicate", self._tag_owner, self.dataset_id, c),
                         )
                     )
             if self.metrics:
@@ -252,6 +271,7 @@ class WritePlane:
                 self.topology.remote_nic,
             ],
             wire,
+            FlowTag("write-back-flush", self._tag_owner, self.dataset_id, chunk),
         )
 
     def _ensure_flusher(self) -> None:

@@ -62,6 +62,7 @@ class FileDataset:
         self.items_per_file = fs.meta.items_per_file(self.dataset_id)
         # fd lookup table indexed by shard number; -1 = not open yet
         self._fd_table = np.full(fs.meta.n_files(self.dataset_id), -1, dtype=np.int64)
+        self.last_io_class = "compute"
 
     # ------------------------------------------------------ backend protocol
     def startup(self) -> float:
@@ -78,9 +79,11 @@ class FileDataset:
                     self.fs.meta.file_path(self.dataset_id, int(i))
                 )
         offsets = (item_ids % self.items_per_file) * self.item_bytes
-        return self.fs.pread_batch(
+        ev = self.fs.pread_batch(
             self._fd_table[file_idx], offsets, epoch=epoch, positions=positions
         )
+        self.last_io_class = self.fs.last_io_class
+        return ev
 
     # -------------------------------------------------------------- teardown
     @property

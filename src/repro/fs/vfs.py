@@ -141,6 +141,9 @@ class HoardFS:
         # write plane per dataset, admission-keyed like the read planes
         self._wplanes: dict[str, tuple[int, WritePlane]] = {}
         self._ra = _RAStats()
+        # stall class of the most recent pread/pread_batch (telemetry plane):
+        # consumers (FileDataset, TrainingJob) snapshot it right after issuing
+        self.last_io_class = "compute"
 
     # ------------------------------------------------------------- data plane
     def mount(
@@ -314,6 +317,7 @@ class HoardFS:
         h.readahead.observe(offset, nbytes, int(items[0]))
         self.cache.touch(attr.dataset_id)
         ev = h.plane.ondemand_io(items, 0, None)   # positions=None: no pagepool
+        self.last_io_class = h.plane.last_io_class
         res = ReadResult(event=ev, nbytes=nbytes)
         if self._materialized(attr):
             # the payload exists only once the fills land; bind it at fire time
@@ -360,7 +364,9 @@ class HoardFS:
             mask = fds == fd
             item_ids[mask] = h.attr.item_lo + offsets[mask] // h.attr.item_bytes
         self.cache.touch(dataset_id)
-        return plane.ondemand_io(item_ids, epoch, positions)
+        ev = plane.ondemand_io(item_ids, epoch, positions)
+        self.last_io_class = plane.last_io_class
+        return ev
 
     # ------------------------------------------------------------ write surface
     def _writable_handle(self, fd: int) -> OpenFile:
@@ -514,6 +520,11 @@ class HoardFS:
                 if self.cache.store.resident_fraction(ds) < 1.0
             ),
             "datasets": self.cache.ls(),
+            # live telemetry snapshot (ISSUE 8): spans/live flows/sampled
+            # series when a Telemetry hub is attached to the clock, else None
+            "telemetry": (
+                self.clock.telemetry.snapshot() if self.clock.telemetry is not None else None
+            ),
         }
 
     def readahead_stats(self) -> dict:

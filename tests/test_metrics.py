@@ -1,0 +1,86 @@
+"""Unit tests for JobMetrics fps summaries (fps_curve / epoch_mean_fps).
+
+Edge cases that the benchmark harness never hits but operators do: empty
+jobs, a single recorded step, and several steps completing at the same
+instant (a deep prefetch queue drains in bursts).
+"""
+
+import numpy as np
+
+from repro.core.metrics import ClusterMetrics, JobMetrics
+
+
+def test_fps_curve_empty_job():
+    m = JobMetrics("empty")
+    idx, fps = m.fps_curve()
+    assert len(idx) == 0
+    assert len(fps) == 0
+
+
+def test_epoch_mean_fps_empty_job():
+    m = JobMetrics("empty")
+    assert m.epoch_mean_fps() == []
+
+
+def test_fps_curve_single_step():
+    m = JobMetrics("one")
+    m.record_step(1.0, 32)
+    idx, fps = m.fps_curve()
+    assert list(idx) == [0]
+    # one stamp gives no rate interval; the curve is defined (zero), not NaN
+    assert list(fps) == [0.0]
+
+
+def test_epoch_mean_fps_single_step():
+    m = JobMetrics("one")
+    m.record_step(2.0, 32)
+    m.mark_epoch(4.0)
+    out = m.epoch_mean_fps()
+    assert len(out) == 1
+    assert abs(out[0] - 32 / 4.0) < 1e-9
+
+
+def test_fps_curve_coincident_steps_finite():
+    """Steps stamped at the same instant must not produce inf/NaN rates."""
+    m = JobMetrics("burst")
+    for t in (1.0, 2.0, 2.0, 2.0, 3.0):
+        m.record_step(t, 10)
+    _idx, fps = m.fps_curve(smooth=2)
+    assert np.all(np.isfinite(fps))
+    assert np.all(fps >= 0.0)
+
+
+def test_epoch_mean_fps_multi_epoch_partition():
+    """Every step lands in exactly one epoch; boundary steps go to the
+    epoch they close (stamps <= epoch end)."""
+    m = JobMetrics("j")
+    for t in (1.0, 2.0, 3.0, 4.0):
+        m.record_step(t, 10)
+    m.mark_epoch(2.0)   # epoch 0: steps at 1.0, 2.0
+    m.mark_epoch(4.0)   # epoch 1: steps at 3.0, 4.0
+    out = m.epoch_mean_fps()
+    assert len(out) == 2
+    assert abs(out[0] - 20 / 2.0) < 1e-9
+    assert abs(out[1] - 20 / 2.0) < 1e-9
+
+
+def test_epoch_mean_fps_zero_length_epoch():
+    """Two coincident epoch marks: the empty epoch reads 0, not inf."""
+    m = JobMetrics("j")
+    m.record_step(1.0, 10)
+    m.mark_epoch(2.0)
+    m.mark_epoch(2.0)
+    out = m.epoch_mean_fps()
+    assert len(out) == 2
+    assert abs(out[0] - 10 / 2.0) < 1e-9
+    assert out[1] == 0.0
+
+
+def test_traffic_matrix_aggregates_jobs():
+    cm = ClusterMetrics()
+    cm.job("a").count_link(0, 1, 100.0)
+    cm.job("b").count_link(0, 1, 50.0)
+    cm.job("b").count_link(2, 3, 7.0)
+    tm = cm.traffic_matrix()
+    assert tm[(0, 1)] == 150.0
+    assert tm[(2, 3)] == 7.0

@@ -100,3 +100,23 @@ def test_utilization_accounting():
     clock.run()
     assert abs(r.busy_bytes - 500.0) < 1.0
     assert abs(r.utilization(clock.now) - 1.0) < 0.01
+
+
+def test_utilization_clamps_to_creation_time():
+    """A resource born mid-sim measures utilization over its own lifetime.
+
+    Node added at t=5 (elastic scale-up), busy t=5..10: utilization(10)
+    must read 1.0 — not 0.5 as a whole-horizon denominator would say.
+    """
+    clock = SimClock()
+    clock.schedule(5.0, lambda: None)
+    clock.run()
+    assert clock.now == 5.0
+    r = Resource("late", 100.0, created_at=clock.now)
+    clock.transfer([r], 500.0)
+    clock.run()
+    assert abs(clock.now - 10.0) < 1e-9
+    assert abs(r.utilization(clock.now) - 1.0) < 1e-9
+    # horizons at/before creation report 0, never a division blow-up
+    assert r.utilization(5.0) == 0.0
+    assert r.utilization(4.0) == 0.0

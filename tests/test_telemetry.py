@@ -1,0 +1,300 @@
+"""Telemetry plane (ISSUE 8): spans, timelines, stall attribution, surfacing.
+
+Exercises the tracing layer at three levels: raw SimClock flows (span
+lifecycle, Chrome export determinism, ResourceSampler timelines), full
+scenarios through ``run_scenario(telemetry=True)`` (per-job stall
+breakdowns that account for every second of wall-clock), and the operator
+surfaces (``HoardFS.statfs`` / ``CacheManager.ls`` / cluster roll-up).
+"""
+
+import dataclasses
+import json
+
+import pytest
+
+from repro.core import (
+    PAPER,
+    CacheManager,
+    ClusterScheduler,
+    DatasetSpec,
+    FlowTag,
+    PlacementEngine,
+    Resource,
+    SimClock,
+    StripeStore,
+    Telemetry,
+    Topology,
+    TopologyConfig,
+    WorkloadJob,
+    rollup_stalls,
+    run_scenario,
+)
+from repro.core.telemetry import STALL_CLASSES
+
+# small workload: 1024 items x 1 KB, 64-item chunks -> 16 chunks
+CAL = dataclasses.replace(
+    PAPER,
+    dataset_bytes=1024 * 1024.0,
+    dataset_items=1024,
+    batch_items=128,
+)
+
+
+# ------------------------------------------------------------------ tracer
+def test_flow_span_lifecycle():
+    clock = SimClock()
+    tel = Telemetry(clock)
+    r = Resource("link", 100.0)
+    clock.transfer([r], 500.0, FlowTag("fill", "job0", "ds", 3))
+    clock.run()
+    spans = tel.tracer.spans
+    assert len(spans) == 1
+    s = spans[0]
+    assert s["kind"] == "fill"
+    assert s["owner"] == "job0"
+    assert s["dataset"] == "ds"
+    assert s["chunk"] == 3
+    assert [r.name for r in s["path"]] == ["link"]
+    assert s["ts"] == 0.0
+    assert s["dur"] == pytest.approx(5.0)
+    assert tel.tracer.live_flows() == 0
+    assert tel.tracer.traced_bytes("ds") == 500.0
+
+
+def test_untagged_flows_still_traced():
+    clock = SimClock()
+    tel = Telemetry(clock)
+    clock.transfer([Resource("r", 10.0)], 100.0)
+    clock.run()
+    assert len(tel.tracer.spans) == 1
+    assert tel.tracer.spans[0]["kind"] == "flow"
+
+
+def test_detach_stops_tracing():
+    clock = SimClock()
+    tel = Telemetry(clock)
+    r = Resource("r", 10.0)
+    clock.transfer([r], 100.0)
+    clock.run()
+    tel.detach()
+    assert clock.telemetry is None
+    clock.transfer([r], 100.0)
+    clock.run()
+    assert len(tel.tracer.spans) == 1  # second flow untraced
+
+
+def _trace_text():
+    clock = SimClock()
+    tel = Telemetry(clock)
+    a, b = Resource("a", 100.0), Resource("b", 50.0)
+    clock.transfer([a], 500.0, FlowTag("fill", "job0", "ds", 0))
+    clock.transfer([a, b], 300.0, FlowTag("stripe-read", "job1", "ds", 1))
+    clock.run()
+    tel.tracer.add_span("step", t0=1.0, dur=0.5, kind="compute", owner="job0")
+    return tel.tracer.export_chrome_trace()
+
+
+def test_chrome_trace_export_shape_and_determinism():
+    text = _trace_text()
+    assert text == _trace_text()  # identical runs -> identical bytes
+    doc = json.loads(text)
+    events = doc["traceEvents"]
+    x = [e for e in events if e["ph"] == "X"]
+    m = [e for e in events if e["ph"] == "M"]
+    assert len(x) == 3
+    # one process row per owner, one thread row per (owner, kind)
+    assert sum(1 for e in m if e["name"] == "process_name") == 2
+    assert sum(1 for e in m if e["name"] == "thread_name") == 3
+    fill = next(e for e in x if e["cat"] == "fill")
+    assert fill["ts"] == 0.0
+    # fill shares "a" with the stripe-read (50/s each until t=6), then runs
+    # alone at 100/s: 300 + 200 bytes -> done at t=8
+    assert fill["dur"] == pytest.approx(8.0 * 1e6)  # microseconds
+    assert fill["args"]["path"] == ["a"]
+
+
+def test_chrome_trace_closes_unfinished_spans():
+    clock = SimClock()
+    tel = Telemetry(clock)
+    r = Resource("r", 100.0)
+    clock.transfer([r], 1000.0, FlowTag("fill", "job0"))
+    clock.run(until=5.0)  # flow half done
+    doc = json.loads(tel.tracer.export_chrome_trace())
+    x = [e for e in doc["traceEvents"] if e["ph"] == "X"]
+    assert x[0]["dur"] == pytest.approx(5.0 * 1e6)
+
+
+# ----------------------------------------------------------------- sampler
+def test_sampler_records_flow_boundaries_only():
+    clock = SimClock()
+    r = Resource("r", 100.0)
+    idle = Resource("idle", 100.0)
+    tel = Telemetry(clock, sample=[r, idle])
+    clock.transfer([r], 500.0)
+    clock.run()
+    s = tel.sampler.series["r"]
+    # initial state + flow start + flow finish, coalesced per instant
+    assert len(s["t"]) == 2
+    assert s["t"] == [0.0, 5.0]
+    assert s["busy_bytes"][-1] == pytest.approx(500.0)
+    assert s["n_flows"] == [1, 0]
+    # the idle resource was only sampled at registration flush, never dirtied
+    assert len(tel.sampler.series["idle"]["t"]) == 1
+
+
+def test_sampler_utilization_curve_and_mean():
+    clock = SimClock()
+    r = Resource("r", 100.0)
+    tel = Telemetry(clock, sample=[r])
+    clock.transfer([r], 500.0)
+    clock.run()
+
+    def later():
+        yield clock.sleep(5.0)  # r idle 5..10
+        yield clock.transfer([r], 500.0)  # busy again 10..15
+
+    clock.process(later())
+    clock.run()
+    t, u = tel.sampler.utilization_curve("r")
+    # boundaries: busy 0..5, idle 5..10 (sampled when the second flow starts),
+    # busy 10..15
+    assert t == [5.0, 10.0, 15.0]
+    assert u == pytest.approx([1.0, 0.0, 1.0])
+    # busy 0..5, idle 5..10, busy 10..15
+    assert tel.sampler.mean_utilization("r", 0.0, 15.0) == pytest.approx(2 / 3)
+    assert tel.sampler.mean_utilization("r", 5.0, 10.0) == pytest.approx(0.0, abs=1e-9)
+
+
+# -------------------------------------------------- stall attribution (jobs)
+def _stall_scenario(backend, **kw):
+    kw.setdefault("epochs", 2)
+    kw.setdefault("n_jobs", 2)
+    kw.setdefault("cal", CAL)
+    kw.setdefault("items_per_chunk", 64)
+    return run_scenario(backend, telemetry=True, **kw)
+
+
+def test_rem_breakdown_accounts_every_second():
+    res = _stall_scenario("rem")
+    for j in res.jobs:
+        assert set(j.stall_breakdown) <= set(STALL_CLASSES)
+        assert sum(j.stall_breakdown.values()) == pytest.approx(j.total_s, rel=1e-6)
+        fr = j.stall_fractions()
+        assert sum(fr.values()) == pytest.approx(1.0, abs=1e-9)
+        # remote streaming dominates a rem job; some compute happened too
+        assert fr.get("remote-NIC", 0.0) > 0.0
+        assert fr.get("compute", 0.0) > 0.0
+
+
+def test_hoard_ondemand_breakdown_has_fill_then_disk():
+    res = _stall_scenario("hoard", fill="ondemand")
+    for j in res.jobs:
+        bd = j.stall_breakdown
+        assert sum(bd.values()) == pytest.approx(j.total_s, rel=1e-6)
+        # epoch 1 waits on fills; steady epochs hit NVMe stripes
+        assert bd.get("fill-wait", 0.0) > 0.0
+        assert bd.get("compute", 0.0) > 0.0
+    # the telemetry hub traced the fill flows with chunk identity
+    fills = [s for s in res.telemetry.tracer.spans if s["kind"] == "fill"]
+    assert len(fills) > 0
+    assert all(s["chunk"] >= 0 for s in fills)
+
+
+def test_warm_hoard_computes_more_than_rem():
+    """Warm cache shifts time out of the stall classes into compute — the
+    claim behind the paper's 2x utilization figure (exact magnitudes are
+    benchmarks/telemetry.py's job; the tiny test workload only orders them)."""
+    warm = _stall_scenario("hoard", fill="prepopulated")
+    rem = _stall_scenario("rem")
+    for wj, rj in zip(warm.jobs, rem.jobs):
+        wf, rf = wj.stall_fractions(), rj.stall_fractions()
+        assert wf["compute"] > rf["compute"]
+        assert wf.get("fill-wait", 0.0) == 0.0
+        assert wf.get("remote-NIC", 0.0) == 0.0  # never touches the remote store
+
+
+def test_scenario_sampler_covers_fabric():
+    res = _stall_scenario("rem", n_jobs=1, epochs=1)
+    names = {r.name for r in res.telemetry.sampler.resources}
+    assert "remote_nic" in names
+    assert "core" in names
+    assert res.telemetry.sampler.n_samples() > 0
+    # the remote NIC actually carried the dataset
+    assert res.telemetry.sampler.mean_utilization("remote_nic") > 0.0
+
+
+def test_untraced_scenario_has_no_hub():
+    res = run_scenario("rem", epochs=1, n_jobs=1, cal=CAL, items_per_chunk=64)
+    assert res.telemetry is None
+    # breakdown still populated (attribution is hub-independent)
+    assert sum(res.jobs[0].stall_breakdown.values()) > 0
+
+
+# ----------------------------------------------- admission-block + roll-up
+def test_admission_block_attributed_to_queued_job():
+    clock = SimClock()
+    topo = Topology(TopologyConfig(nodes_per_rack=1, remote_nic_bw=2e6), clock)
+    store = StripeStore(topo)
+    cache = CacheManager(
+        topo, store, clock, capacity_per_node=1e12,
+        items_per_chunk=64, fill_bw=CAL.fill_bw,
+    )
+    engine = ClusterScheduler(clock, topo, store, cache, PlacementEngine(topo, cache), cal=CAL)
+    cache.register(DatasetSpec("ds", "nfs://ds", 1024, 1024))
+    res = engine.run([
+        WorkloadJob("first", "ds", arrival=0.0, epochs=1),
+        WorkloadJob("second", "ds", arrival=0.0, epochs=1),
+    ])
+    first, second = res.record("first"), res.record("second")
+    assert first.result.stall_breakdown.get("admission-block", 0.0) == 0.0
+    assert second.result.stall_breakdown["admission-block"] == pytest.approx(second.queued_s)
+    roll = engine.stall_rollup()
+    assert roll["jobs"] == 2
+    assert roll["seconds"]["admission-block"] == pytest.approx(second.queued_s)
+    assert sum(roll["fractions"].values()) == pytest.approx(1.0, abs=1e-9)
+
+
+def test_rollup_stalls_empty():
+    assert rollup_stalls([]) == {"jobs": 0, "seconds": {}, "fractions": {}}
+
+
+def test_workload_result_stall_rollup():
+    res = _stall_scenario("rem", n_jobs=2, epochs=1)
+    roll = res.workload.stall_rollup()
+    assert roll["jobs"] == 2
+    assert sum(roll["fractions"].values()) == pytest.approx(1.0, abs=1e-9)
+
+
+# ------------------------------------------------------------- surfacing
+def test_statfs_and_ls_surface_telemetry():
+    from repro.fs import HoardFS, MetadataService
+
+    clock = SimClock()
+    topo = Topology(TopologyConfig(nodes_per_rack=4), clock)
+    store = StripeStore(topo)
+    cache = CacheManager(
+        topo, store, clock, capacity_per_node=1e12,
+        items_per_chunk=64, fill_bw=CAL.fill_bw,
+    )
+    cache.register(DatasetSpec("ds", "nfs://ds", 1024, 1024))
+    cache.admit("ds", topo.nodes[:4])
+    cache.mark_filled("ds")
+    tel = Telemetry(clock)
+    fs = HoardFS(clock, topo, cache, MetadataService(store), topo.nodes[0], cal=CAL)
+    sf = fs.statfs()
+    assert sf["telemetry"]["spans"] == 0
+    fd = fs.open(fs.meta.file_path("ds", 0))
+    res = fs.pread(fd, 4096, 0)
+    clock.run()
+    assert res.event.fired
+    assert fs.last_io_class in STALL_CLASSES
+    sf = fs.statfs()
+    assert sf["telemetry"]["spans"] == len(tel.tracer.spans) > 0
+    assert sf["telemetry"]["live_flows"] == 0
+    row = next(r for r in cache.ls() if r["dataset"] == "ds")
+    assert row["live_flows"] == 0
+    assert row["traced_bytes"] > 0
+    tel.detach()
+    assert fs.statfs()["telemetry"] is None
+    row = next(r for r in cache.ls() if r["dataset"] == "ds")
+    assert row["traced_bytes"] == 0
