@@ -22,7 +22,7 @@ Run: ``PYTHONPATH=src python -m benchmarks.run --only coldstart``
 
 from __future__ import annotations
 
-from repro.core import run_scenario
+from repro.core import ScenarioConfig, run_scenario
 
 from .common import Row, timed
 
@@ -45,7 +45,7 @@ def coldstart_rows():
     results = {}
     for name, kw in variants:
         def run(kw=kw):
-            return run_scenario(epochs=EPOCHS, n_jobs=N_JOBS, **kw)
+            return run_scenario(ScenarioConfig(epochs=EPOCHS, n_jobs=N_JOBS, **kw))
 
         res, us = timed(run)
         results[name] = res

@@ -1,9 +1,11 @@
 """Shared helpers for the paper-table benchmarks.
 
 Besides the human-facing ``Row``/table output, benchmarks record
-*machine-readable* metrics via :func:`record_metric`.  Only **deterministic,
-simulated** quantities belong there (epoch seconds, remote bytes, hit rates,
-moved fractions) — never wall-clock timings, which vary with the CI runner.
+*machine-readable* metrics via :func:`record_metric`.  **Deterministic,
+simulated** quantities (epoch seconds, remote bytes, hit rates, moved
+fractions) are the ones gated against ``baseline.json``; wall-clock timings
+(e.g. simscale's flows/sec) may be *recorded* for trend reporting but must
+never be added to the baseline — they vary with the CI runner.
 ``benchmarks/run.py`` dumps each benchmark's metrics to ``BENCH_<name>.json``
 and gates them against the committed ``benchmarks/baseline.json``: any metric
 more than 10% worse than baseline fails the run (the CI perf-trajectory
@@ -16,7 +18,7 @@ from __future__ import annotations
 import time
 from dataclasses import dataclass
 
-from repro.core import PAPER, run_scenario
+from repro.core import PAPER, ScenarioConfig, run_scenario
 
 
 @dataclass
@@ -86,7 +88,7 @@ def epoch_profile(backend: str, *, epochs: int = 3, n_jobs: int = 4, bench=None,
     BENCH_*.json (as ``<backend>_stall_<class>``) — the stall attribution
     rides along with every epoch profile a paper table takes.
     """
-    res = run_scenario(backend, epochs=epochs, n_jobs=n_jobs, **kw)
+    res = run_scenario(ScenarioConfig(backend=backend, epochs=epochs, n_jobs=n_jobs, **kw))
     if bench is not None:
         record_stall_fractions(bench, f"{backend}_", res.jobs)
     su = sum(j.startup_s for j in res.jobs) / len(res.jobs)

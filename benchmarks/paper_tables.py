@@ -8,7 +8,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.core import PAPER, run_scenario
+from repro.core import PAPER, ScenarioConfig, run_scenario
 from repro.core.placement import PlacementEngine
 from repro.core.topology import Gb, Topology, TopologyConfig
 
@@ -31,9 +31,9 @@ def table1_backends():
             if name == "striped_r2":
                 # replication doubles stripe writes but reads hit the closest
                 # replica; steady epochs are read-path bound -> ~equal time
-                res = run_scenario(kw["backend"], epochs=3, n_jobs=4)
+                res = run_scenario(ScenarioConfig(backend=kw["backend"], epochs=3, n_jobs=4))
             else:
-                res = run_scenario(kw["backend"], epochs=3, n_jobs=4)
+                res = run_scenario(ScenarioConfig(backend=kw["backend"], epochs=3, n_jobs=4))
             return res.mean_epoch_times[-1]
 
         steady, us = timed(run)
@@ -50,7 +50,7 @@ def fig3_epochs():
     curves = {}
     for backend in ("rem", "nvme", "hoard"):
         def run(b=backend):
-            res = run_scenario(b, epochs=2, n_jobs=4)
+            res = run_scenario(ScenarioConfig(backend=b, epochs=2, n_jobs=4))
             jm = res.metrics.job("job0")
             return jm.fps_curve(smooth=25)
 
@@ -143,7 +143,7 @@ def table4_network():
     rows, lines = [], ["Table 4 — network usage during 60-epoch training (per job)"]
     for b in ("rem", "hoard"):
         def run(b=b):
-            res = run_scenario(b, epochs=3, n_jobs=4)
+            res = run_scenario(ScenarioConfig(backend=b, epochs=3, n_jobs=4))
             su = sum(j.startup_s for j in res.jobs) / len(res.jobs)
             e = res.mean_epoch_times
             dur = project_total(su, e[0], e[-1], 60)
@@ -182,11 +182,11 @@ def table5_uplink():
     # aggregates the per-job link counters into the Table-5-style view.
     def run_tm():
         nper = 4
-        res = run_scenario(
-            "hoard", epochs=2, n_jobs=2,
+        res = run_scenario(ScenarioConfig(
+            backend="hoard", epochs=2, n_jobs=2,
             topo_cfg=TopologyConfig(nodes_per_rack=nper, racks_per_pod=2),
             cache_nodes=[0, 1, 2, 3], job_nodes=[4, 5], prefetch=True,
-        )
+        ))
         tm = res.metrics.traffic_matrix()
         racks: dict[tuple[int, int], float] = {}
         for (src, dst), b in tm.items():
@@ -321,10 +321,10 @@ def misplaced_job_scenario():
     topo_cfg = TopologyConfig(nodes_per_rack=4, racks_per_pod=2)
 
     def run(job_nodes):
-        res = run_scenario(
-            "hoard", epochs=2, n_jobs=2, topo_cfg=topo_cfg,
+        res = run_scenario(ScenarioConfig(
+            backend="hoard", epochs=2, n_jobs=2, topo_cfg=topo_cfg,
             cache_nodes=[0, 1, 2, 3], job_nodes=job_nodes, prefetch=True,
-        )
+        ))
         return res.mean_epoch_times[-1]
 
     local, us1 = timed(lambda: run([0, 1]))
@@ -346,8 +346,9 @@ def misplaced_job_scenario():
     slim = TopologyConfig(nodes_per_rack=4, racks_per_pod=2, tor_uplink_bw=10 * Gb)
 
     def run_fast(job_nodes):
-        res = run_scenario("hoard", epochs=2, n_jobs=4, topo_cfg=slim, cal=fast,
-                           cache_nodes=[0, 1, 2, 3], job_nodes=job_nodes, prefetch=True)
+        res = run_scenario(ScenarioConfig(
+            backend="hoard", epochs=2, n_jobs=4, topo_cfg=slim, cal=fast,
+            cache_nodes=[0, 1, 2, 3], job_nodes=job_nodes, prefetch=True))
         return res.mean_epoch_times[-1]
 
     f_local, us3 = timed(lambda: run_fast([0, 1, 2, 3]))

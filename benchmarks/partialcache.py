@@ -26,7 +26,7 @@ from __future__ import annotations
 import dataclasses
 
 from repro.core import PAPER
-from repro.core.cluster import run_scenario
+from repro.core.cluster import ScenarioConfig, run_scenario
 
 from .common import Row, record_metric
 
@@ -42,8 +42,8 @@ MIN_SPEEDUP_R50 = 1.4
 
 
 def _hoard(ratio: float, epochs: int):
-    return run_scenario(
-        "hoard",
+    return run_scenario(ScenarioConfig(
+        backend="hoard",
         epochs=epochs,
         n_jobs=4,
         cal=CAL,
@@ -51,7 +51,7 @@ def _hoard(ratio: float, epochs: int):
         capacity_per_node=ratio * CAL.dataset_bytes / N_CACHE_NODES,
         allow_partial=True,
         items_per_chunk=IPC,
-    )
+    ))
 
 
 def _remote_bytes(res) -> float:
@@ -66,7 +66,7 @@ def partialcache_rows():
         "on-demand fill + read-through)"
     ]
 
-    rem = run_scenario("rem", epochs=1, n_jobs=4, cal=CAL)
+    rem = run_scenario(ScenarioConfig(backend="rem", epochs=1, n_jobs=4, cal=CAL))
     rem_epoch = rem.mean_epoch_times[0]
     rows.append(Row("partialcache/rem_epoch", rem_epoch * 1e6, "pure remote"))
     record_metric("partialcache", "rem_epoch_s", rem_epoch, better="lower")

@@ -95,6 +95,7 @@ def main() -> None:
     from .partialcache import partialcache_rows
     from .rebalance import rebalance_rows
     from .roofline_table import roofline_rows
+    from .simscale import simscale_rows
     from .telemetry import telemetry_rows
     from .writeburst import writeburst_rows
 
@@ -117,6 +118,7 @@ def main() -> None:
         ("writeburst", writeburst_rows),
         ("partialcache", partialcache_rows),
         ("telemetry", telemetry_rows),
+        ("simscale", simscale_rows),
     ]
     if args.quick:
         benches = [
@@ -124,7 +126,7 @@ def main() -> None:
             if b[0] in (
                 "table3", "table5", "headline", "roofline", "ingest",
                 "fsbench", "rebalance", "writeburst", "partialcache",
-                "telemetry",
+                "telemetry", "simscale",
             )
         ]
     if args.only:

@@ -30,7 +30,7 @@ import sys
 import time
 from dataclasses import replace
 
-from repro.core import PAPER, run_scenario
+from repro.core import PAPER, ScenarioConfig, run_scenario
 from repro.core.topology import Gb, TopologyConfig
 
 from .common import Row, record_metric, record_stall_fractions, timed
@@ -48,14 +48,14 @@ def _small_cal(items: int = 1024):
 
 _DET_CODE = """\
 import dataclasses, hashlib
-from repro.core import PAPER, run_scenario
+from repro.core import PAPER, ScenarioConfig, run_scenario
 cal = dataclasses.replace(
     PAPER, dataset_bytes=1024 * 1024.0, dataset_items=1024, batch_items=128
 )
-res = run_scenario(
-    "hoard", fill="ondemand", epochs=2, n_jobs=2, cal=cal,
+res = run_scenario(ScenarioConfig(
+    backend="hoard", fill="ondemand", epochs=2, n_jobs=2, cal=cal,
     items_per_chunk=64, telemetry=True,
-)
+))
 text = res.telemetry.tracer.export_chrome_trace()
 print(hashlib.sha256(text.encode()).hexdigest())
 """
@@ -91,10 +91,10 @@ def telemetry_rows():
         backend = kw.pop("backend")
 
         def run(backend=backend, kw=kw):
-            return run_scenario(
-                backend, epochs=3, n_jobs=4, topo_cfg=topo_cfg, cal=cal,
-                telemetry=True, **kw,
-            )
+            return run_scenario(ScenarioConfig(
+                backend=backend, epochs=3, n_jobs=4, topo_cfg=topo_cfg,
+                cal=cal, telemetry=True, **kw,
+            ))
 
         res, us = timed(run)
         _check_complete_attribution(res)                       # gate 1
@@ -139,10 +139,10 @@ def telemetry_rows():
     # ---- Perfetto artifact: a cold 1-job run's full span timeline ----------
     out_dir = os.environ.get("BENCH_ARTIFACTS", "bench-artifacts")
     os.makedirs(out_dir, exist_ok=True)
-    trace_res = run_scenario(
-        "hoard", fill="ondemand", epochs=2, n_jobs=1, topo_cfg=topo_cfg,
-        cal=cal, replication=2, telemetry=True,
-    )
+    trace_res = run_scenario(ScenarioConfig(
+        backend="hoard", fill="ondemand", epochs=2, n_jobs=1,
+        topo_cfg=topo_cfg, cal=cal, replication=2, telemetry=True,
+    ))
     trace_path = os.path.join(out_dir, "TRACE_headline.json")
     text = trace_res.telemetry.tracer.export_chrome_trace(trace_path)
     lines.append(
@@ -167,10 +167,10 @@ def telemetry_rows():
         # trip a generational collection
         gc.collect()
         t0 = time.perf_counter()
-        run_scenario(
-            "hoard", fill="ondemand", cal=_small_cal(32768), telemetry=telemetry,
-            **_SMALL,
-        )
+        run_scenario(ScenarioConfig(
+            backend="hoard", fill="ondemand", cal=_small_cal(32768),
+            telemetry=telemetry, **_SMALL,
+        ))
         return time.perf_counter() - t0
 
     # the headline runs above left a large live heap (10^5-sample series,

@@ -23,6 +23,7 @@ from repro.core import (
     PAPER,
     CacheManager,
     DatasetSpec,
+    ScenarioConfig,
     SimClock,
     StripeStore,
     Topology,
@@ -55,15 +56,15 @@ print(f"$ ls /hoard/imagenet            -> {len(shards)} shards "
 print(f"$ stat /hoard/imagenet/{shards[0]}  -> {attr.size/1e6:.1f} MB, "
       f"items [{attr.item_lo}, {attr.item_lo + attr.n_items})")
 sf = fs.statfs()
-ds = sf["datasets"][0]
-print(f"$ statfs                        -> {sf['used_bytes']/1e6:.0f} MB used, "
-      f"dataset '{ds['dataset']}' is {ds['state']} "
-      f"(fill {ds['fill_progress']:.0%}, {ds['active_readers']} readers)\n")
+ds = sf.datasets[0]
+print(f"$ statfs                        -> {sf.used_bytes/1e6:.0f} MB used, "
+      f"dataset '{ds.dataset}' is {ds.state} "
+      f"(fill {ds.fill_progress:.0%}, {ds.active_readers} readers)\n")
 
 # ---- 2. the same cold job, iterator vs paths --------------------------------
 results = {}
 for backend in ("hoard", "posix"):
-    res = run_scenario(backend, epochs=2, n_jobs=2, fill="ondemand", cal=CAL)
+    res = run_scenario(ScenarioConfig(backend=backend, epochs=2, n_jobs=2, fill="ondemand", cal=CAL))
     e = res.mean_epoch_times
     remote = res.metrics.total("remote_bytes") / 1e6
     results[backend] = res

@@ -7,7 +7,7 @@ speedups — the paper's core result, end to end.
     PYTHONPATH=src python examples/quickstart.py
 """
 
-from repro.core import PAPER, run_scenario
+from repro.core import PAPER, ScenarioConfig, run_scenario
 
 print("Hoard quickstart — AlexNet/ImageNet workload (paper Section 4)")
 print(f"dataset: {PAPER.dataset_bytes/1e9:.0f} GB, {PAPER.dataset_items:,} items; "
@@ -15,7 +15,7 @@ print(f"dataset: {PAPER.dataset_bytes/1e9:.0f} GB, {PAPER.dataset_items:,} items
 
 results = {}
 for backend in ("rem", "nvme", "hoard"):
-    res = run_scenario(backend, epochs=2, n_jobs=4)
+    res = run_scenario(ScenarioConfig(backend=backend, epochs=2, n_jobs=4))
     e = res.mean_epoch_times
     results[backend] = res
     print(f"{backend:6s} epoch1={e[0]:7.1f}s  epoch2={e[1]:7.1f}s "

@@ -20,10 +20,11 @@ from .cache import (
     CacheManager,
     CacheState,
     DatasetSpec,
+    DatasetStat,
     EvictionPolicy,
 )
 from .calibration import PAPER, WorkloadCalibration
-from .cluster import ScenarioResult, build_cluster, run_scenario
+from .cluster import ScenarioConfig, ScenarioResult, build_cluster, run_scenario
 from .loader import (
     HoardBackend,
     HoardLoader,
@@ -80,7 +81,8 @@ from .writeplane import (
 __all__ = [
     "AllOf", "CacheEntry", "CacheEvent", "CacheFullError", "CacheManager",
     "CacheState", "ChunkCodec", "ChunkCorruption", "ChunkMove", "ClusterMetrics",
-    "ClusterScheduler", "DatasetSpec", "Event", "EvictionPolicy", "FillTracker",
+    "ClusterScheduler", "DatasetSpec", "DatasetStat", "Event", "EvictionPolicy",
+    "FillTracker",
     "FlowTag",
     "HoardBackend", "HoardLoader", "JobMetrics", "JobRecord", "JobResult",
     "JobSpec", "LRUCache", "LRUStackModel", "LocalCopyBackend",
@@ -88,7 +90,7 @@ __all__ = [
     "Placement", "PlacementEngine", "PrefetchScheduler", "ReadScheduler",
     "RebalanceError",
     "RebalancePlan", "Rebalancer", "RemoteBackend", "Resource", "ResourceSampler",
-    "STALL_CLASSES", "ScenarioResult",
+    "STALL_CLASSES", "ScenarioConfig", "ScenarioResult",
     "SimClock", "StripeDataPlane", "StripeError", "StripeManifest", "StripeStore",
     "Telemetry", "Topology", "TopologyConfig", "Tracer", "TrainingJob",
     "WRITE_BACK", "WRITE_POLICIES",

@@ -76,6 +76,65 @@ class DatasetSpec:
 
 
 @dataclass
+class DatasetStat:
+    """One dataset's row in :meth:`CacheManager.ls` (typed, not a dict).
+
+    Attribute access is the API (``stat.resident_fraction``); callers that
+    need a plain mapping — JSON dumps, the statfs wire shape — use
+    :meth:`as_dict`, which reproduces the pre-typed dict key-for-key.
+    """
+
+    dataset: str
+    state: str                       # CacheState value ("cached", "partial", ...)
+    bytes: float                     # logical dataset size
+    nodes: list[int]                 # member cache nodes
+    pinned: bool
+    active_readers: int              # reader pins (eviction guard)
+    last_access: float
+    fill_progress: float
+    # partial caching: fraction of chunks holding stripe replicas and mean
+    # decayed chunk heat — 1.0/quiet for CACHED, the honest sub-1.0 figure
+    # for PARTIAL (statfs surfaces both)
+    resident_fraction: float
+    chunk_heat_mean: float
+    admissions: int
+    migrating_chunks: int            # elastic rebalancer's in-flight chunks
+    # write-path state: unflushed write-back debt + un-fsync'd buffers; both
+    # make the dataset eviction-immune (data loss)
+    dirty_chunks: int
+    dirty_bytes: float
+    pending_write_bytes: float
+    membership_epoch: Optional[int]
+    # live telemetry (ISSUE 8): flows in flight for this dataset and bytes
+    # traced so far — 0 when no Telemetry hub is attached
+    live_flows: int
+    traced_bytes: float
+
+    def as_dict(self) -> dict:
+        """Back-compat mapping, key-identical to the pre-typed ``ls()`` rows."""
+        return {
+            "dataset": self.dataset,
+            "state": self.state,
+            "bytes": self.bytes,
+            "nodes": list(self.nodes),
+            "pinned": self.pinned,
+            "active_readers": self.active_readers,
+            "last_access": self.last_access,
+            "fill_progress": self.fill_progress,
+            "resident_fraction": self.resident_fraction,
+            "chunk_heat_mean": self.chunk_heat_mean,
+            "admissions": self.admissions,
+            "migrating_chunks": self.migrating_chunks,
+            "dirty_chunks": self.dirty_chunks,
+            "dirty_bytes": self.dirty_bytes,
+            "pending_write_bytes": self.pending_write_bytes,
+            "membership_epoch": self.membership_epoch,
+            "live_flows": self.live_flows,
+            "traced_bytes": self.traced_bytes,
+        }
+
+
+@dataclass
 class CacheEntry:
     spec: DatasetSpec
     state: CacheState = CacheState.REGISTERED
@@ -475,8 +534,8 @@ class CacheManager:
         e = self.entries.get(dataset_id)
         return e is not None and e.state is CacheState.CACHED
 
-    def ls(self) -> list[dict]:
-        """The `query cached datasets` API.
+    def ls(self) -> list[DatasetStat]:
+        """The `query cached datasets` API — one :class:`DatasetStat` per entry.
 
         Reports the reader-pin count (``active_readers``, the workload
         engine's eviction guard) and live fill progress per dataset, so an
@@ -486,66 +545,46 @@ class CacheManager:
         rebalancer's live state: chunks mid-flight count toward the node
         capacity they are moving onto, so an operator sizing an admission
         must see them here rather than discovering the reservation by
-        hitting ``CacheFullError``.
+        hitting ``CacheFullError``.  (``DatasetStat.as_dict()`` reproduces
+        the pre-typed dict rows for serialization.)
         """
-        return [
-            {
-                "dataset": e.spec.dataset_id,
-                "state": e.state.value,
-                "bytes": e.spec.total_bytes,
-                "nodes": list(e.nodes),
-                "pinned": e.pinned,
-                "active_readers": e.active_readers,
-                "last_access": e.last_access,
-                "fill_progress": self.fill_progress(e.spec.dataset_id),
-                # partial caching: fraction of chunks holding stripe replicas
-                # and mean decayed chunk heat — 1.0/quiet for CACHED, the
-                # honest sub-1.0 figure for PARTIAL (statfs surfaces both)
-                "resident_fraction": (
-                    self.store.resident_fraction(e.spec.dataset_id)
-                    if e.spec.dataset_id in self.store.manifests
-                    else 0.0
-                ),
-                "chunk_heat_mean": (
-                    float(h.mean()) if len(h := self.store.chunk_heat(e.spec.dataset_id)) else 0.0
-                ),
-                "admissions": e.admissions,
-                "migrating_chunks": self.store.migrating_chunks(e.spec.dataset_id),
-                # write-path state: unflushed write-back debt + un-fsync'd
-                # buffers; both make the dataset eviction-immune (data loss)
-                "dirty_chunks": (
-                    len(self.store.dirty_chunks(e.spec.dataset_id))
-                    if e.spec.dataset_id in self.store.manifests
-                    else 0
-                ),
-                "dirty_bytes": (
-                    self.store.dataset_dirty_bytes(e.spec.dataset_id)
-                    if e.spec.dataset_id in self.store.manifests
-                    else 0
-                ),
-                "pending_write_bytes": self.store.pending_write_bytes(e.spec.dataset_id),
-                "membership_epoch": (
-                    self.store.manifests[e.spec.dataset_id].membership_epoch
-                    if e.spec.dataset_id in self.store.manifests
-                    else None
-                ),
-                # live telemetry (ISSUE 8): flows in flight for this dataset
-                # and bytes traced so far — 0 when no Telemetry hub attached
-                "live_flows": (
-                    self.clock.telemetry.tracer.live_flows(e.spec.dataset_id)
-                    if self.clock.telemetry is not None
-                    and self.clock.telemetry.tracer is not None
-                    else 0
-                ),
-                "traced_bytes": (
-                    self.clock.telemetry.tracer.traced_bytes(e.spec.dataset_id)
-                    if self.clock.telemetry is not None
-                    and self.clock.telemetry.tracer is not None
-                    else 0
-                ),
-            }
-            for e in self.entries.values()
-        ]
+        tracer = self.clock.telemetry.tracer if self.clock.telemetry is not None else None
+        stats = []
+        for e in self.entries.values():
+            did = e.spec.dataset_id
+            in_store = did in self.store.manifests
+            heat = self.store.chunk_heat(did)
+            stats.append(
+                DatasetStat(
+                    dataset=did,
+                    state=e.state.value,
+                    bytes=e.spec.total_bytes,
+                    nodes=list(e.nodes),
+                    pinned=e.pinned,
+                    active_readers=e.active_readers,
+                    last_access=e.last_access,
+                    fill_progress=self.fill_progress(did),
+                    resident_fraction=(
+                        self.store.resident_fraction(did) if in_store else 0.0
+                    ),
+                    chunk_heat_mean=float(heat.mean()) if len(heat) else 0.0,
+                    admissions=e.admissions,
+                    migrating_chunks=self.store.migrating_chunks(did),
+                    dirty_chunks=(
+                        len(self.store.dirty_chunks(did)) if in_store else 0
+                    ),
+                    dirty_bytes=(
+                        self.store.dataset_dirty_bytes(did) if in_store else 0
+                    ),
+                    pending_write_bytes=self.store.pending_write_bytes(did),
+                    membership_epoch=(
+                        self.store.manifests[did].membership_epoch if in_store else None
+                    ),
+                    live_flows=tracer.live_flows(did) if tracer is not None else 0,
+                    traced_bytes=tracer.traced_bytes(did) if tracer is not None else 0,
+                )
+            )
+        return stats
 
     # --------------------------------------------------------------- eviction
     def _evictable(

@@ -1,18 +1,25 @@
 """Scenario harness: build the paper's cluster and run REM/NVMe/Hoard jobs.
 
-One call — ``run_scenario(backend="hoard", epochs=2, ...)`` — constructs the
-4-node/4-GPU-per-node cluster of Table 2 (or any other topology), registers
-the ImageNet-like dataset and hands N identical jobs to the multi-tenant
-workload engine (:mod:`repro.core.workload`), which places them, runs the
-discrete-event simulation and returns per-job results + metrics.  Every
-benchmark module is a thin wrapper over this; this, in turn, is a thin
-single-dataset wrapper over :class:`~repro.core.workload.ClusterScheduler`.
+One call — ``run_scenario(ScenarioConfig(backend="hoard", epochs=2))`` —
+constructs the 4-node/4-GPU-per-node cluster of Table 2 (or any other
+topology), registers the ImageNet-like dataset and hands N identical jobs to
+the multi-tenant workload engine (:mod:`repro.core.workload`), which places
+them, runs the discrete-event simulation and returns per-job results +
+metrics.  Every benchmark module is a thin wrapper over this; this, in turn,
+is a thin single-dataset wrapper over
+:class:`~repro.core.workload.ClusterScheduler`.
+
+:class:`ScenarioConfig` is the typed scenario description (every knob is a
+field with a default); the legacy flat-kwargs call form
+``run_scenario("hoard", epochs=2, ...)`` still works but emits a
+``DeprecationWarning`` — see docs/api.md for the migration table.
 """
 
 from __future__ import annotations
 
+import warnings
 from dataclasses import dataclass, field
-from typing import Optional
+from typing import Optional, Sequence
 
 from .cache import CacheManager, DatasetSpec, EvictionPolicy
 from .calibration import PAPER, WorkloadCalibration
@@ -60,6 +67,48 @@ class ScenarioResult:
         return max(j.total_s for j in self.jobs)
 
 
+@dataclass
+class ScenarioConfig:
+    """Typed description of one scenario run (the knobs of ``run_scenario``).
+
+    Every field mirrors a knob of the legacy flat-kwargs signature under the
+    same name (plus ``engine``, new with the vectorized simclock); defaults
+    reproduce the paper's measured configuration.  See the ``run_scenario``
+    docstring for the semantics of each knob and docs/api.md for the
+    kwargs-to-field migration table.
+    """
+
+    backend: str                               # "hoard" | "posix" | "rem" | "nvme"
+    epochs: int = 2
+    n_jobs: int = 4
+    topo_cfg: Optional[TopologyConfig] = None  # None -> paper's 4-node cluster
+    cal: WorkloadCalibration = PAPER
+    mdr: Optional[float] = None                # memory/dataset ratio (Figure 4)
+    remote_bw_scale: float = 1.0               # NFS throttle (Figure 5 x-axis)
+    physical_copy: bool = False                # nvme: stream the staging copy
+    cache_nodes: Optional[Sequence[int]] = None
+    job_nodes: Optional[Sequence[int]] = None
+    prefetch: bool = False                     # paper's async pre-fetch model
+    fill: str = "afm"                          # "afm" | "prepopulated" | "ondemand"
+    prefetch_inflight: int = 8
+    seed: int = 0
+    replication: int = 1
+    capacity_per_node: float = 1e12            # NVMe cache bytes per node
+    cache_fraction: Optional[float] = None     # partial caching (ISSUE 7)
+    allow_partial: bool = False
+    items_per_chunk: Optional[int] = None
+    telemetry: bool = False                    # attach a Telemetry hub
+    engine: Optional[str] = None               # simclock flow engine ("vector")
+
+    def __post_init__(self):
+        if self.fill not in ("afm", "prepopulated", "ondemand"):
+            raise ValueError(f"unknown fill mode {self.fill!r}")
+        if self.prefetch and self.fill != "afm":
+            # prefetch books a whole-dataset transfer + mark_filled of its
+            # own; combining it with another fill model double-streams
+            raise ValueError(f"prefetch=True conflicts with fill={self.fill!r}")
+
+
 def build_cluster(
     topo_cfg: Optional[TopologyConfig] = None,
     *,
@@ -68,8 +117,9 @@ def build_cluster(
     policy: EvictionPolicy = EvictionPolicy.LRU,
     replication: int = 1,
     items_per_chunk: Optional[int] = None,
+    engine: Optional[str] = None,
 ):
-    clock = SimClock()
+    clock = SimClock(engine=engine)
     topo = Topology(topo_cfg or TopologyConfig(), clock)
     store = StripeStore(topo)
     kw = {} if items_per_chunk is None else {"items_per_chunk": items_per_chunk}
@@ -87,30 +137,14 @@ def build_cluster(
     return clock, topo, store, cache, engine
 
 
-def run_scenario(
-    backend: str,
-    *,
-    epochs: int = 2,
-    n_jobs: int = 4,
-    topo_cfg: Optional[TopologyConfig] = None,
-    cal: WorkloadCalibration = PAPER,
-    mdr: Optional[float] = None,
-    remote_bw_scale: float = 1.0,
-    physical_copy: bool = False,
-    cache_nodes: Optional[list[int]] = None,
-    job_nodes: Optional[list[int]] = None,
-    prefetch: bool = False,
-    fill: str = "afm",
-    prefetch_inflight: int = 8,
-    seed: int = 0,
-    replication: int = 1,
-    capacity_per_node: float = 1e12,
-    cache_fraction: Optional[float] = None,
-    allow_partial: bool = False,
-    items_per_chunk: Optional[int] = None,
-    telemetry: bool = False,
-) -> ScenarioResult:
-    """Run ``n_jobs`` identical jobs over the chosen data path.
+def run_scenario(config=None, /, **kwargs) -> ScenarioResult:
+    """Run ``cfg.n_jobs`` identical jobs over the chosen data path.
+
+    Primary form: ``run_scenario(ScenarioConfig(backend="hoard", ...))``.
+    The legacy flat form ``run_scenario("hoard", epochs=2, ...)`` (or
+    ``run_scenario(backend="hoard", ...)``) still works — it builds the same
+    :class:`ScenarioConfig` and emits a ``DeprecationWarning`` — and is
+    bit-identical to the typed form (the equivalence suite asserts it).
 
     ``remote_bw_scale`` scales the NFS stream+NIC rates (Figure 5's x-axis);
     ``mdr`` sets the memory/dataset ratio (Figure 4); ``cache_nodes`` /
@@ -143,26 +177,61 @@ def run_scenario(
     fabric links (remote NIC, core, up-links, node NICs/NVMe, disk queues)
     get busy/queued timelines, and each ``JobResult`` carries its
     ``stall_breakdown``; the hub is returned on ``ScenarioResult.telemetry``.
+
+    ``engine`` selects the simclock flow engine (``"vector"`` default,
+    ``"scalar"`` reference — see :mod:`repro.core.simclock`); results are
+    bit-identical either way.
     """
-    topo_cfg = topo_cfg or TopologyConfig()
-    if remote_bw_scale != 1.0:
+    if isinstance(config, ScenarioConfig):
+        if kwargs:
+            raise TypeError(
+                f"run_scenario(ScenarioConfig, ...) takes no extra keyword "
+                f"arguments, got {sorted(kwargs)}; set them as config fields"
+            )
+        cfg = config
+    else:
+        warnings.warn(
+            "run_scenario(backend, **kwargs) is deprecated; pass a "
+            "ScenarioConfig instead: run_scenario(ScenarioConfig(backend=..., "
+            "...)) — see docs/api.md for the field mapping",
+            DeprecationWarning,
+            stacklevel=2,
+        )
+        if config is not None:
+            kwargs["backend"] = config
+        cfg = ScenarioConfig(**kwargs)
+    return _run_config(cfg)
+
+
+def _run_config(cfg: ScenarioConfig) -> ScenarioResult:
+    backend = cfg.backend
+    cal = cfg.cal
+    fill = cfg.fill
+    cache_fraction = cfg.cache_fraction
+    allow_partial = cfg.allow_partial
+    job_nodes = cfg.job_nodes
+    topo_cfg = cfg.topo_cfg or TopologyConfig()
+    if cfg.remote_bw_scale != 1.0:
         # Figure 5: the tc tool throttles the NFS NIC; per-stream service and
         # the AFM fill path (remote-fed) scale with it, local paths do not
         from dataclasses import replace
 
         cal = replace(
             cal,
-            rem_miss_bw=cal.rem_miss_bw * remote_bw_scale,
-            fill_bw=cal.fill_bw * remote_bw_scale,
+            rem_miss_bw=cal.rem_miss_bw * cfg.remote_bw_scale,
+            fill_bw=cal.fill_bw * cfg.remote_bw_scale,
         )
-        topo_cfg = replace(topo_cfg, remote_nic_bw=topo_cfg.remote_nic_bw * remote_bw_scale)
+        topo_cfg = replace(
+            topo_cfg, remote_nic_bw=topo_cfg.remote_nic_bw * cfg.remote_bw_scale
+        )
     clock, topo, store, cache, engine = build_cluster(
-        topo_cfg, cal=cal, replication=replication,
-        capacity_per_node=capacity_per_node, items_per_chunk=items_per_chunk,
+        topo_cfg, cal=cal, replication=cfg.replication,
+        capacity_per_node=cfg.capacity_per_node,
+        items_per_chunk=cfg.items_per_chunk, engine=cfg.engine,
     )
     metrics = ClusterMetrics()
     tel = None
-    if telemetry:
+    if cfg.telemetry:
         sample = [topo.remote_nic, topo.core]
         sample += [topo.rack_uplink_tx[r] for r in sorted(topo.rack_uplink_tx)]
         sample += [topo.rack_uplink_rx[r] for r in sorted(topo.rack_uplink_rx)]
@@ -177,16 +246,12 @@ def run_scenario(
 
     # ---- placement: paper default = 1 job per node, dataset striped on all
     cached_backend = backend in CACHED_BACKENDS
+    cache_nodes = cfg.cache_nodes
     if cache_nodes is None:
         cache_nodes = [n.node_id for n in topo.nodes[:4]] if cached_backend else []
     cnodes = [topo.node(i) for i in cache_nodes] if cache_nodes else []
 
-    if fill not in ("afm", "prepopulated", "ondemand"):
-        raise ValueError(f"unknown fill mode {fill!r}")
-    if prefetch and fill != "afm":
-        # prefetch books a whole-dataset transfer + mark_filled of its own;
-        # combining it with another fill model double-streams the dataset
-        raise ValueError(f"prefetch=True conflicts with fill={fill!r}")
+    # fill-mode validation lives in ScenarioConfig.__post_init__
     if cached_backend:
         # the scenario contract: the dataset is admitted at t=0, before any
         # job runs.  For fill="ondemand" the engine wires the fill plane:
@@ -200,30 +265,30 @@ def run_scenario(
         )
         if fill == "prepopulated":
             cache.mark_filled("imagenet")
-        if prefetch:
+        if cfg.prefetch:
             cache.prefetch("imagenet", cnodes)
 
     scheduler = ClusterScheduler(clock, topo, store, cache, engine, cal=cal, metrics=metrics)
     jobs = []
-    for j in range(n_jobs):
+    for j in range(cfg.n_jobs):
         job_id = f"job{j}"
         jobs.append(
             WorkloadJob(
                 job_id=job_id,
                 dataset_id="imagenet",
                 arrival=0.0,
-                epochs=epochs,
+                epochs=cfg.epochs,
                 n_nodes=1,
                 gpus_per_node=4,
                 backend=backend,
                 fill=fill,
-                seed=seed + stable_seed(job_id),
-                mdr=mdr,
-                physical_copy=physical_copy,
+                seed=cfg.seed + stable_seed(job_id),
+                mdr=cfg.mdr,
+                physical_copy=cfg.physical_copy,
                 compute_node_ids=(
                     [job_nodes[j % len(job_nodes)]] if job_nodes is not None else None
                 ),
-                prefetch_inflight=prefetch_inflight,
+                prefetch_inflight=cfg.prefetch_inflight,
                 fill_driver=(j == 0 and fill == "ondemand"),
                 cal=cal,
                 cache_fraction=cache_fraction,

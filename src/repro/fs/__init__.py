@@ -29,7 +29,7 @@ path and ``benchmarks/fsbench.py`` for the acceptance measurements.
 from .dataset import FileDataset, posix_loader
 from .metadata import FS_SCHEMA_VERSION, ROOT, FileAttr, MetadataService
 from .readahead import Readahead
-from .vfs import HoardFS, OpenFile, ReadResult, WriteResult
+from .vfs import HoardFS, OpenFile, ReadResult, StatFS, WriteResult
 
 __all__ = [
     "FS_SCHEMA_VERSION",
@@ -41,6 +41,7 @@ __all__ = [
     "ROOT",
     "ReadResult",
     "Readahead",
+    "StatFS",
     "WriteResult",
     "posix_loader",
 ]

@@ -31,7 +31,7 @@ from typing import Optional, Sequence
 
 import numpy as np
 
-from ..core.cache import CacheManager, CacheState
+from ..core.cache import CacheManager, CacheState, DatasetStat
 from ..core.calibration import PAPER, WorkloadCalibration
 from ..core.loader import StripeDataPlane
 from ..core.metrics import JobMetrics
@@ -69,6 +69,58 @@ class WriteResult:
 
     event: Event
     nbytes: int
+
+
+@dataclass
+class StatFS:
+    """Filesystem-wide view returned by :meth:`HoardFS.statfs` (typed).
+
+    Capacity figures aggregate over the live membership view; ``datasets``
+    is :meth:`CacheManager.ls` verbatim (a list of
+    :class:`~repro.core.cache.DatasetStat`).  :meth:`as_dict` reproduces
+    the pre-typed dict shape key-for-key — nested dataset rows included —
+    for JSON dumps and older tooling.
+    """
+
+    capacity_bytes: float
+    used_bytes: float
+    # un-fsync'd buffers sit OUTSIDE used_bytes (the committed copy is what
+    # node_usage charges), so free_bytes subtracts them — otherwise admission
+    # oversubscribes a node whose NVMe holds unflushed writes
+    free_bytes: float
+    dirty_bytes: float               # unflushed write-back debt (inside used)
+    write_buffer_bytes: float
+    # live read-serving backlog across member nodes (contention-aware read
+    # scheduler): bytes queued on the read disks and NIC-tx
+    read_queue_bytes: float
+    open_handles: int
+    membership_epoch: int
+    members: list[int]
+    migrating_chunks: int            # elastic rebalancer's in-flight chunks
+    # partial caching (ISSUE 7): datasets resident as a chunk subset — the
+    # per-dataset rows carry the honest resident_fraction / chunk_heat_mean
+    partial_datasets: int
+    datasets: list[DatasetStat]
+    # live telemetry snapshot (ISSUE 8) when a hub is attached, else None
+    telemetry: Optional[dict]
+
+    def as_dict(self) -> dict:
+        """Back-compat mapping, key-identical to the pre-typed ``statfs()``."""
+        return {
+            "capacity_bytes": self.capacity_bytes,
+            "used_bytes": self.used_bytes,
+            "free_bytes": self.free_bytes,
+            "dirty_bytes": self.dirty_bytes,
+            "write_buffer_bytes": self.write_buffer_bytes,
+            "read_queue_bytes": self.read_queue_bytes,
+            "open_handles": self.open_handles,
+            "membership_epoch": self.membership_epoch,
+            "members": list(self.members),
+            "migrating_chunks": self.migrating_chunks,
+            "partial_datasets": self.partial_datasets,
+            "datasets": [d.as_dict() for d in self.datasets],
+            "telemetry": self.telemetry,
+        }
 
 
 @dataclass
@@ -461,7 +513,7 @@ class HoardFS:
         return self.pwrite(fd, data, length)
 
     # ------------------------------------------------------------- statistics
-    def statfs(self) -> dict:
+    def statfs(self) -> "StatFS":
         """Filesystem-wide view: capacity + per-dataset cache state.
 
         Capacity figures aggregate over the *live membership view* — with an
@@ -493,39 +545,31 @@ class HoardFS:
             sum(self.cache.store.write_buffer_bytes(n.node_id) for n in nodes)
         )
         dirty = float(sum(self.cache.store.dirty_bytes(n.node_id) for n in nodes))
-        return {
-            "capacity_bytes": capacity,
-            "used_bytes": used,
-            "free_bytes": capacity - used - write_buffer,
-            "dirty_bytes": dirty,
-            "write_buffer_bytes": write_buffer,
-            # live read-serving backlog across member nodes (contention-aware
-            # read scheduler): bytes queued on the read disks and NIC-tx
-            "read_queue_bytes": float(
+        return StatFS(
+            capacity_bytes=capacity,
+            used_bytes=used,
+            free_bytes=capacity - used - write_buffer,
+            dirty_bytes=dirty,
+            write_buffer_bytes=write_buffer,
+            read_queue_bytes=float(
                 sum(self.cache.store.read_load_bytes(n.node_id) for n in nodes)
             ),
-            "open_handles": len(self._handles),
-            "membership_epoch": rb.epoch.value if rb is not None else 0,
-            "members": sorted(rb.members) if rb is not None else [n.node_id for n in nodes],
-            "migrating_chunks": sum(
+            open_handles=len(self._handles),
+            membership_epoch=rb.epoch.value if rb is not None else 0,
+            members=sorted(rb.members) if rb is not None else [n.node_id for n in nodes],
+            migrating_chunks=sum(
                 self.cache.store.migrating_chunks(ds) for ds in self.cache.store.manifests
             ),
-            # partial caching (ISSUE 7): datasets resident as a chunk subset.
-            # The per-dataset rows below carry the honest resident_fraction
-            # and chunk_heat_mean — a PARTIAL dataset never reports as fully
-            # cached (fill_progress < 1.0 reflects the non-resident chunks).
-            "partial_datasets": sum(
+            partial_datasets=sum(
                 1
                 for ds in self.cache.store.manifests
                 if self.cache.store.resident_fraction(ds) < 1.0
             ),
-            "datasets": self.cache.ls(),
-            # live telemetry snapshot (ISSUE 8): spans/live flows/sampled
-            # series when a Telemetry hub is attached to the clock, else None
-            "telemetry": (
+            datasets=self.cache.ls(),
+            telemetry=(
                 self.clock.telemetry.snapshot() if self.clock.telemetry is not None else None
             ),
-        }
+        )
 
     def readahead_stats(self) -> dict:
         """Aggregate readahead effectiveness across closed + live handles."""

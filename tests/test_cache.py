@@ -96,8 +96,8 @@ def test_lifecycle_decoupled_from_jobs():
     cache.mark_filled("ds")
     # job ends: no cache API call happens — dataset remains
     assert cache.is_cached("ds")
-    listing = {e["dataset"]: e for e in cache.ls()}
-    assert listing["ds"]["state"] == "cached"
+    listing = {e.dataset: e for e in cache.ls()}
+    assert listing["ds"].state == "cached"
 
 
 def test_ls_reports_reader_pins_and_fill_progress():
@@ -109,18 +109,18 @@ def test_ls_reports_reader_pins_and_fill_progress():
     store.put_chunk("ds", 0)
     cache.acquire("ds")
     cache.acquire("ds")
-    row = {e["dataset"]: e for e in cache.ls()}["ds"]
-    assert row["state"] == "filling"
-    assert row["active_readers"] == 2
-    assert row["fill_progress"] == 0.25
-    assert row["admissions"] == 1
+    row = {e.dataset: e for e in cache.ls()}["ds"]
+    assert row.state == "filling"
+    assert row.active_readers == 2
+    assert row.fill_progress == 0.25
+    assert row.admissions == 1
     cache.release("ds")
     cache.release("ds")
     for c in range(1, 4):
         store.put_chunk("ds", c)
         cache.note_chunk_filled("ds")
-    row = {e["dataset"]: e for e in cache.ls()}["ds"]
-    assert row["state"] == "cached" and row["fill_progress"] == 1.0
+    row = {e.dataset: e for e in cache.ls()}["ds"]
+    assert row.state == "cached" and row.fill_progress == 1.0
     assert entry.active_readers == 0
 
 

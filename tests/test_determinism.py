@@ -21,7 +21,7 @@ import sys
 
 import pytest
 
-from repro.core import PAPER, run_scenario, stable_seed
+from repro.core import PAPER, ScenarioConfig, run_scenario, stable_seed
 
 # small workload so the full backend x fill matrix stays fast
 CAL = dataclasses.replace(
@@ -41,7 +41,7 @@ MATRIX = [
 
 
 def _fingerprint(backend: str, fill: str):
-    res = run_scenario(backend, epochs=2, n_jobs=2, cal=CAL, fill=fill, seed=7)
+    res = run_scenario(ScenarioConfig(backend=backend, epochs=2, n_jobs=2, cal=CAL, fill=fill, seed=7))
     return (
         res.sim_seconds,
         tuple(tuple(j.epoch_times) for j in res.jobs),
@@ -64,9 +64,9 @@ def test_stable_seed_properties():
 
 _SNIPPET = """
 import dataclasses, json
-from repro.core import PAPER, run_scenario
+from repro.core import PAPER, ScenarioConfig, run_scenario
 CAL = dataclasses.replace(PAPER, dataset_bytes=1024 * 1024.0, dataset_items=1024, batch_items=128)
-res = run_scenario("hoard", epochs=2, n_jobs=2, cal=CAL, fill="ondemand", seed=7)
+res = run_scenario(ScenarioConfig(backend="hoard", epochs=2, n_jobs=2, cal=CAL, fill="ondemand", seed=7))
 print(json.dumps({
     "sim": res.sim_seconds.hex(),
     "epochs": [[t.hex() for t in j.epoch_times] for j in res.jobs],

@@ -26,6 +26,7 @@ from repro.core import (
     HoardBackend,
     HoardLoader,
     JobMetrics,
+    ScenarioConfig,
     SimClock,
     StripeError,
     StripeStore,
@@ -173,7 +174,7 @@ def test_sequential_scan_cold_converges_remote_once():
     assert store.filled_fraction("ds") == 1.0
     assert cache.is_cached("ds")
     assert fs.metrics.counters["remote_bytes"] == pytest.approx(CAL.dataset_bytes)
-    assert fs.statfs()["open_handles"] == 0
+    assert fs.statfs().open_handles == 0
 
 
 def test_warm_scan_readahead_hit_rate_and_zero_remote():
@@ -382,14 +383,14 @@ def test_statfs_reports_pins_and_fill_progress():
     clock.run()
     fd = fs.open("/hoard/ds/shard-000000.bin")
     sf = fs.statfs()
-    assert sf["open_handles"] == 1
-    assert sf["used_bytes"] == CAL.dataset_bytes
-    assert sf["free_bytes"] == sf["capacity_bytes"] - sf["used_bytes"]
-    (ds,) = [d for d in sf["datasets"] if d["dataset"] == "ds"]
-    assert ds["state"] == "filling"
-    assert ds["active_readers"] == 1                      # the open handle
-    assert ds["fill_progress"] == pytest.approx(4 / 16)   # live fill state
-    assert ds["admissions"] == 1
+    assert sf.open_handles == 1
+    assert sf.used_bytes == CAL.dataset_bytes
+    assert sf.free_bytes == sf.capacity_bytes - sf.used_bytes
+    (ds,) = [d for d in sf.datasets if d.dataset == "ds"]
+    assert ds.state == "filling"
+    assert ds.active_readers == 1                      # the open handle
+    assert ds.fill_progress == pytest.approx(4 / 16)   # live fill state
+    assert ds.admissions == 1
     fs.close(fd)
 
 
@@ -465,8 +466,8 @@ def test_run_scenario_posix_matches_hoard():
     """The whole engine path: N posix jobs over the shared clairvoyant fill
     produce the same epoch times and remote traffic as N hoard jobs."""
     kw = dict(epochs=2, n_jobs=2, fill="ondemand", cal=CAL)
-    hoard = run_scenario("hoard", **kw)
-    posix = run_scenario("posix", **kw)
+    hoard = run_scenario(ScenarioConfig(backend="hoard", **kw))
+    posix = run_scenario(ScenarioConfig(backend="posix", **kw))
     assert posix.mean_epoch_times == hoard.mean_epoch_times
     assert posix.metrics.total("remote_bytes") == hoard.metrics.total("remote_bytes")
     rec = posix.workload.record("job0")

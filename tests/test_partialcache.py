@@ -238,8 +238,8 @@ def test_ls_reports_residency_and_heat():
     cache.mark_filled("ds")
     store.note_chunk_access("ds", np.asarray([0], dtype=np.int64))
     (row,) = cache.ls()
-    assert row["resident_fraction"] == pytest.approx(0.5)
-    assert row["chunk_heat_mean"] > 0.0
+    assert row.resident_fraction == pytest.approx(0.5)
+    assert row.chunk_heat_mean > 0.0
 
 
 # ------------------------------------------- prefetch flow sizing (satellite 1)
@@ -310,17 +310,17 @@ def test_scenario_runs_with_a_half_resident_dataset():
     read through to the remote store every time."""
     import dataclasses
 
-    from repro.core.cluster import run_scenario
+    from repro.core.cluster import ScenarioConfig, run_scenario
 
     cal = dataclasses.replace(
         PAPER, dataset_bytes=16 * 1024 * 1024.0, dataset_items=16384,
         batch_items=512,
     )
     # 4 chunks x 4 MiB (default 4096-item chunks); 4 x 2.2 MiB caches 2 chunks
-    res = run_scenario(
-        "hoard", epochs=1, n_jobs=1, cal=cal, fill="ondemand",
+    res = run_scenario(ScenarioConfig(
+        backend="hoard", epochs=1, n_jobs=1, cal=cal, fill="ondemand",
         capacity_per_node=2.2 * 1024 * 1024, allow_partial=True,
-    )
+    ))
     assert res.store.resident_fraction("imagenet") == pytest.approx(0.5)
     assert len(res.jobs) == 1 and res.jobs[0].epoch_times[0] > 0
     topo = res.store.topology

@@ -235,10 +235,10 @@ def test_pending_fill_counter_tracks_fill_and_maintenance():
 def test_prefetch_conflicts_with_non_afm_fill():
     """prefetch=True would double-stream the dataset under the other fill
     models; run_scenario refuses the combination."""
-    from repro.core import run_scenario
+    from repro.core import ScenarioConfig, run_scenario
 
     with pytest.raises(ValueError, match="prefetch"):
-        run_scenario("hoard", epochs=1, n_jobs=1, fill="ondemand", prefetch=True)
+        run_scenario(ScenarioConfig(backend="hoard", epochs=1, n_jobs=1, fill="ondemand", prefetch=True))
 
 
 def test_materialized_ondemand_put_chunk_round_trip(tmp_path):

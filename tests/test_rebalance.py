@@ -322,8 +322,8 @@ def test_ls_and_uplink_report_migration():
     rb.add_node(4)
     clock.run(until=1.0)
     (row,) = cache.ls()
-    assert row["migrating_chunks"] == store.migrating_chunks("ds") > 0
-    assert row["membership_epoch"] == 1
+    assert row.migrating_chunks == store.migrating_chunks("ds") > 0
+    assert row.membership_epoch == 1
     # mid-rebalance the up-link budget includes the migration draw
     busy = engine.uplink_usage(24, 0.5)
     assert busy == pytest.approx(base + 400.0 / topo.cfg.tor_uplink_bw)

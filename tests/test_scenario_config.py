@@ -1,0 +1,180 @@
+"""The typed scenario API (ISSUE 9): ScenarioConfig, typed stat returns.
+
+Three contracts:
+
+* ``run_scenario(ScenarioConfig(...))`` is the primary entry point and is
+  bit-for-bit equivalent to the deprecated kwargs form (which must warn);
+* ``CacheManager.ls()`` / ``HoardFS.statfs()`` return typed dataclasses
+  whose ``as_dict()`` round-trips every field (the JSON escape hatch);
+* no *new* public function in ``repro.core`` / ``repro.fs`` returns an
+  untyped dict literal — the grandfathered offenders are frozen in
+  :data:`DICT_RETURN_ALLOWLIST` and the list must only ever shrink.
+"""
+
+import ast
+import dataclasses
+import pathlib
+import warnings
+
+import pytest
+
+from repro.core import (
+    PAPER,
+    CacheManager,
+    DatasetSpec,
+    DatasetStat,
+    ScenarioConfig,
+    SimClock,
+    StripeStore,
+    Topology,
+    TopologyConfig,
+    run_scenario,
+)
+from repro.fs import HoardFS, MetadataService, StatFS
+
+CAL = dataclasses.replace(
+    PAPER, dataset_bytes=1024 * 1024.0, dataset_items=1024, batch_items=128
+)
+
+
+def _print(res):
+    jobs = tuple(tuple(j.epoch_times) for j in res.jobs)
+    mets = tuple(sorted(
+        (jid, k, v)
+        for jid, jm in res.metrics.jobs.items()
+        for k, v in jm.counters.items()
+    ))
+    return res.sim_seconds, jobs, mets
+
+
+@pytest.mark.parametrize("kw", [
+    {"epochs": 2, "n_jobs": 3, "fill": "ondemand"},
+    {"epochs": 2, "n_jobs": 2, "cache_fraction": 0.5, "allow_partial": True},
+])
+def test_config_equals_legacy_kwargs(kw):
+    """Typed and deprecated-kwargs forms produce bit-identical results."""
+    typed = run_scenario(ScenarioConfig(backend="hoard", cal=CAL, **kw))
+    with pytest.deprecated_call():
+        legacy = run_scenario(backend="hoard", cal=CAL, **kw)
+    assert _print(typed) == _print(legacy)
+
+
+def test_legacy_positional_backend_warns_and_matches():
+    with pytest.deprecated_call():
+        legacy = run_scenario("hoard", epochs=1, n_jobs=2, cal=CAL)
+    typed = run_scenario(ScenarioConfig(backend="hoard", epochs=1, n_jobs=2, cal=CAL))
+    assert _print(typed) == _print(legacy)
+
+
+def test_typed_call_does_not_warn():
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        run_scenario(ScenarioConfig(backend="nvme", epochs=1, n_jobs=1, cal=CAL))
+
+
+def test_config_plus_kwargs_rejected():
+    cfg = ScenarioConfig(backend="hoard", cal=CAL)
+    with pytest.raises(TypeError, match="no extra keyword arguments"):
+        run_scenario(cfg, epochs=3)
+
+
+def test_config_validation():
+    with pytest.raises(ValueError, match="unknown fill"):
+        ScenarioConfig(backend="hoard", fill="warp")
+    with pytest.raises(ValueError, match="prefetch"):
+        ScenarioConfig(backend="hoard", prefetch=True, fill="prepopulated")
+
+
+# ---------------------------------------------------------------- typed stats
+
+def _small_fs():
+    clock = SimClock()
+    topo = Topology(TopologyConfig(nodes_per_rack=4), clock)
+    store = StripeStore(topo)
+    cache = CacheManager(topo, store, clock, items_per_chunk=256,
+                         fill_bw=CAL.fill_bw)
+    cache.register(DatasetSpec("ds", "nfs://store/ds", CAL.dataset_items,
+                               int(CAL.item_bytes)))
+    cache.admit("ds", topo.nodes[:2], on_demand=True)
+    fs = HoardFS(clock, topo, cache, MetadataService(store), topo.nodes[0],
+                 cal=CAL)
+    return clock, cache, fs
+
+
+def test_ls_returns_dataset_stats_with_round_trip():
+    _clock, cache, _fs = _small_fs()
+    rows = cache.ls()
+    assert rows and all(isinstance(r, DatasetStat) for r in rows)
+    for row in rows:
+        d = row.as_dict()
+        # every dataclass field survives the dict round-trip, by name
+        for f in dataclasses.fields(DatasetStat):
+            assert f.name in d
+            assert d[f.name] == getattr(row, f.name)
+
+
+def test_statfs_returns_typed_stat_with_round_trip():
+    _clock, _cache, fs = _small_fs()
+    st = fs.statfs()
+    assert isinstance(st, StatFS)
+    assert st.free_bytes == st.capacity_bytes - st.used_bytes
+    d = st.as_dict()
+    for f in dataclasses.fields(StatFS):
+        assert f.name in d
+    # nested dataset rows serialize through DatasetStat.as_dict()
+    assert d["datasets"] == [row.as_dict() for row in st.datasets]
+    assert all(isinstance(row, dict) for row in d["datasets"])
+
+
+# ------------------------------------------------------- dict-return lint
+
+SRC = pathlib.Path(__file__).resolve().parent.parent / "src" / "repro"
+
+#: public functions allowed to keep returning untyped dicts.  ``as_dict`` is
+#: the sanctioned typed->dict escape hatch; the rest predate the typed-API
+#: redesign.  Add NOTHING here — new public APIs return dataclasses.
+DICT_RETURN_ALLOWLIST = {
+    "core/loader.py::stall_fractions",
+    "core/metrics.py::traffic_matrix",
+    "core/readsched.py::replica_read_bytes",
+    "core/telemetry.py::rollup_stalls",
+    "core/telemetry.py::series",
+    "fs/vfs.py::readahead_stats",
+}
+
+
+def _dict_returning_publics():
+    found = set()
+    for pkg in ("core", "fs"):
+        for py in sorted((SRC / pkg).rglob("*.py")):
+            tree = ast.parse(py.read_text())
+            for node in ast.walk(tree):
+                if not isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                    continue
+                if node.name.startswith("_") or node.name == "as_dict":
+                    continue
+                for ret in ast.walk(node):
+                    if not (isinstance(ret, ast.Return) and ret.value is not None):
+                        continue
+                    v = ret.value
+                    if isinstance(v, (ast.Dict, ast.DictComp)) or (
+                        isinstance(v, ast.Call)
+                        and isinstance(v.func, ast.Name)
+                        and v.func.id == "dict"
+                    ):
+                        found.add(f"{pkg}/{py.relative_to(SRC / pkg)}::{node.name}")
+                        break
+    return found
+
+
+def test_no_new_untyped_dict_public_returns():
+    found = _dict_returning_publics()
+    new = found - DICT_RETURN_ALLOWLIST
+    assert not new, (
+        f"new public dict-returning API in repro.core/repro.fs: {sorted(new)} "
+        f"— return a dataclass with as_dict() instead (see DatasetStat)"
+    )
+    gone = DICT_RETURN_ALLOWLIST - found
+    assert not gone, (
+        f"allowlist entries no longer exist (prune them): {sorted(gone)}"
+    )

@@ -8,14 +8,14 @@ bands within tolerance.
 import numpy as np
 import pytest
 
-from repro.core import PAPER, run_scenario
+from repro.core import PAPER, ScenarioConfig, run_scenario
 
 
 @pytest.fixture(scope="module")
 def three_epoch_runs():
     out = {}
     for backend in ("rem", "nvme", "hoard"):
-        out[backend] = run_scenario(backend, epochs=3, n_jobs=4)
+        out[backend] = run_scenario(ScenarioConfig(backend=backend, epochs=3, n_jobs=4))
     return out
 
 
@@ -67,20 +67,20 @@ def test_hoard_remote_traffic_only_first_epoch(three_epoch_runs):
 
 def test_mdr_insensitivity_of_hoard():
     """Fig 4: Hoard steady epochs barely move across MDR; REM degrades."""
-    h_lo = run_scenario("hoard", epochs=2, n_jobs=1, mdr=0.25).mean_epoch_times[-1]
-    h_hi = run_scenario("hoard", epochs=2, n_jobs=1, mdr=0.75).mean_epoch_times[-1]
+    h_lo = run_scenario(ScenarioConfig(backend="hoard", epochs=2, n_jobs=1, mdr=0.25)).mean_epoch_times[-1]
+    h_hi = run_scenario(ScenarioConfig(backend="hoard", epochs=2, n_jobs=1, mdr=0.75)).mean_epoch_times[-1]
     # "almost completely agnostic": <10% across a 3x MDR range (the GPFS
     # client CPU binds; only the miss-path data-move cost moves slightly)
     assert abs(h_lo - h_hi) / h_hi < 0.10
-    r_lo = run_scenario("rem", epochs=2, n_jobs=1, mdr=0.25).mean_epoch_times[-1]
-    r_hi = run_scenario("rem", epochs=2, n_jobs=1, mdr=1.2).mean_epoch_times[-1]
+    r_lo = run_scenario(ScenarioConfig(backend="rem", epochs=2, n_jobs=1, mdr=0.25)).mean_epoch_times[-1]
+    r_hi = run_scenario(ScenarioConfig(backend="rem", epochs=2, n_jobs=1, mdr=1.2)).mean_epoch_times[-1]
     assert r_lo > r_hi * 1.5
 
 
 def test_mdr_above_one_converges_to_gpu_bound():
     """Fig 4: MDR > 1.1 -> all three paths hit the GPU ceiling epoch 2+."""
     times = {
-        b: run_scenario(b, epochs=2, n_jobs=1, mdr=1.2).mean_epoch_times[-1]
+        b: run_scenario(ScenarioConfig(backend=b, epochs=2, n_jobs=1, mdr=1.2)).mean_epoch_times[-1]
         for b in ("rem", "nvme", "hoard")
     }
     gpu_epoch = PAPER.dataset_bytes / PAPER.gpu_bw
@@ -91,14 +91,14 @@ def test_mdr_above_one_converges_to_gpu_bound():
 def test_bandwidth_sweep_only_hits_hoard_fill():
     """Fig 5: halving remote BW halves REM throughput; Hoard steady epochs
     are unaffected (only epoch 1 stretches)."""
-    full = run_scenario("hoard", epochs=2, n_jobs=1, remote_bw_scale=1.0)
-    half = run_scenario("hoard", epochs=2, n_jobs=1, remote_bw_scale=0.5)
+    full = run_scenario(ScenarioConfig(backend="hoard", epochs=2, n_jobs=1, remote_bw_scale=1.0))
+    half = run_scenario(ScenarioConfig(backend="hoard", epochs=2, n_jobs=1, remote_bw_scale=0.5))
     assert half.mean_epoch_times[0] > 1.9 * full.mean_epoch_times[0]
     rel = abs(half.mean_epoch_times[-1] - full.mean_epoch_times[-1]) / full.mean_epoch_times[-1]
     assert rel < 0.02
 
-    r_full = run_scenario("rem", epochs=1, n_jobs=1, remote_bw_scale=1.0).mean_epoch_times[0]
-    r_half = run_scenario("rem", epochs=1, n_jobs=1, remote_bw_scale=0.5).mean_epoch_times[0]
+    r_full = run_scenario(ScenarioConfig(backend="rem", epochs=1, n_jobs=1, remote_bw_scale=1.0)).mean_epoch_times[0]
+    r_half = run_scenario(ScenarioConfig(backend="rem", epochs=1, n_jobs=1, remote_bw_scale=0.5)).mean_epoch_times[0]
     assert r_half > 1.9 * r_full
 
 

@@ -20,6 +20,7 @@ from repro.core import (
     FlowTag,
     PlacementEngine,
     Resource,
+    ScenarioConfig,
     SimClock,
     StripeStore,
     Telemetry,
@@ -171,7 +172,7 @@ def _stall_scenario(backend, **kw):
     kw.setdefault("n_jobs", 2)
     kw.setdefault("cal", CAL)
     kw.setdefault("items_per_chunk", 64)
-    return run_scenario(backend, telemetry=True, **kw)
+    return run_scenario(ScenarioConfig(backend=backend, telemetry=True, **kw))
 
 
 def test_rem_breakdown_accounts_every_second():
@@ -224,7 +225,7 @@ def test_scenario_sampler_covers_fabric():
 
 
 def test_untraced_scenario_has_no_hub():
-    res = run_scenario("rem", epochs=1, n_jobs=1, cal=CAL, items_per_chunk=64)
+    res = run_scenario(ScenarioConfig(backend="rem", epochs=1, n_jobs=1, cal=CAL, items_per_chunk=64))
     assert res.telemetry is None
     # breakdown still populated (attribution is hub-independent)
     assert sum(res.jobs[0].stall_breakdown.values()) > 0
@@ -282,19 +283,19 @@ def test_statfs_and_ls_surface_telemetry():
     tel = Telemetry(clock)
     fs = HoardFS(clock, topo, cache, MetadataService(store), topo.nodes[0], cal=CAL)
     sf = fs.statfs()
-    assert sf["telemetry"]["spans"] == 0
+    assert sf.telemetry["spans"] == 0
     fd = fs.open(fs.meta.file_path("ds", 0))
     res = fs.pread(fd, 4096, 0)
     clock.run()
     assert res.event.fired
     assert fs.last_io_class in STALL_CLASSES
     sf = fs.statfs()
-    assert sf["telemetry"]["spans"] == len(tel.tracer.spans) > 0
-    assert sf["telemetry"]["live_flows"] == 0
-    row = next(r for r in cache.ls() if r["dataset"] == "ds")
-    assert row["live_flows"] == 0
-    assert row["traced_bytes"] > 0
+    assert sf.telemetry["spans"] == len(tel.tracer.spans) > 0
+    assert sf.telemetry["live_flows"] == 0
+    row = next(r for r in cache.ls() if r.dataset == "ds")
+    assert row.live_flows == 0
+    assert row.traced_bytes > 0
     tel.detach()
-    assert fs.statfs()["telemetry"] is None
-    row = next(r for r in cache.ls() if r["dataset"] == "ds")
-    assert row["traced_bytes"] == 0
+    assert fs.statfs().telemetry is None
+    row = next(r for r in cache.ls() if r.dataset == "ds")
+    assert row.traced_bytes == 0

@@ -1,0 +1,174 @@
+"""Vector flow engine ≡ scalar reference, bit for bit (ISSUE 9).
+
+The vectorized fabric replaces per-flow Python loops with numpy columns and
+a sparse incidence structure; everything observable — completion times, busy
+bytes, queue depths, whole-scenario metrics — must be *bit-identical* to the
+scalar engine, which is kept verbatim as the semantics oracle.  These tests
+run the same work through both engines and compare with ``==``, never
+``approx``.
+"""
+
+import dataclasses
+
+import pytest
+
+from repro.core import PAPER, run_scenario, ScenarioConfig
+from repro.core.simclock import EPS_BYTES, Resource, SimClock
+
+ENGINES = ("scalar", "vector")
+
+CAL = dataclasses.replace(
+    PAPER, dataset_bytes=1024 * 1024.0, dataset_items=1024, batch_items=128
+)
+
+
+def _kernel_trace(engine):
+    """A little flow program exercising sharing, joins and staggered starts."""
+    clock = SimClock(engine=engine)
+    a = Resource("a", 100.0)
+    b = Resource("b", 40.0)
+    log = []
+
+    def prog():
+        yield clock.transfer([a], 500.0)
+        log.append(("one", clock.now, a.busy_bytes))
+        yield clock.all_of([clock.transfer([a], 300.0), clock.transfer([a, b], 200.0)])
+        log.append(("join", clock.now, a.busy_bytes, b.busy_bytes))
+        yield clock.sleep(1.0)
+        yield clock.transfer([b, a], 80.0)
+        log.append(("rev", clock.now, a.queued_bytes(clock.now), b.queued_bytes(clock.now)))
+
+    clock.process(prog())
+    # cross traffic overlapping the program, started mid-flight
+    clock.schedule(2.0, lambda: clock.transfer([a], 150.0))
+    clock.schedule(2.0, lambda: clock.transfer([b], 60.0))
+    clock.run()
+    clock.assert_no_stranded_flows()
+    return tuple(log), clock.now, clock.flows_settled
+
+
+def test_kernel_trace_bit_identical():
+    assert _kernel_trace("vector") == _kernel_trace("scalar")
+
+
+@pytest.mark.parametrize("engine", ENGINES)
+def test_fair_share_and_bottleneck(engine):
+    """The flow-kernel basics hold on either engine."""
+    clock = SimClock(engine=engine)
+    r = Resource("r", 100.0)
+    t = {}
+    clock.transfer([r], 200.0).on_fire(lambda _v: t.setdefault("small", clock.now))
+    clock.transfer([r], 800.0).on_fire(lambda _v: t.setdefault("big", clock.now))
+    clock.run()
+    assert abs(t["small"] - 4.0) < 1e-6
+    assert abs(t["big"] - 10.0) < 1e-6
+    assert clock.flows_settled == 2
+
+
+def _scenario_print(backend, **kw):
+    res = run_scenario(ScenarioConfig(backend=backend, epochs=2, n_jobs=3, cal=CAL, **kw))
+    jobs = tuple(tuple(j.epoch_times) for j in res.jobs)
+    mets = tuple(sorted(
+        (jid, k, v)
+        for jid, jm in res.metrics.jobs.items()
+        for k, v in jm.counters.items()
+    ))
+    return res.sim_seconds, jobs, mets
+
+
+@pytest.mark.parametrize("backend,kw", [
+    ("hoard", {}),
+    ("hoard", {"fill": "ondemand"}),
+    ("rem", {}),
+    ("hoard", {"cache_fraction": 0.5, "allow_partial": True}),
+])
+def test_scenarios_bit_identical_across_engines(backend, kw):
+    """Whole scenarios (fills, evictions, partial caching) match exactly."""
+    vec = _scenario_print(backend, engine="vector", **kw)
+    sca = _scenario_print(backend, engine="scalar", **kw)
+    assert vec == sca
+
+
+@pytest.mark.parametrize("engine", ENGINES)
+def test_sub_epsilon_flow_completes(engine):
+    """A flow below EPS_BYTES finishes at once instead of lingering."""
+    clock = SimClock(engine=engine)
+    r = Resource("r", 100.0)
+    ev = clock.transfer([r], EPS_BYTES / 2)
+    clock.run()
+    assert ev.fired
+    clock.assert_no_stranded_flows()
+
+
+@pytest.mark.parametrize("engine", ENGINES)
+def test_no_stranded_flows_mid_run(engine):
+    """The shared-epsilon invariant holds between event-loop steps too."""
+    clock = SimClock(engine=engine)
+    r = Resource("r", 10.0)
+    for size in (100.0, 35.0, 1e-7, 250.0):
+        clock.transfer([r], size)
+    while clock.pending_events:
+        clock.run(until=clock.now + 0.5)
+        clock.assert_no_stranded_flows()
+    assert clock.flows_settled == 4
+
+
+def test_row_compaction_preserves_results():
+    """Thousands of short flows force row/entry compaction; totals match."""
+    done = {}
+    for engine in ENGINES:
+        clock = SimClock(engine=engine)
+        r1, r2 = Resource("r1", 1000.0), Resource("r2", 800.0)
+
+        def wave(i):
+            def prog():
+                yield clock.transfer([r1, r2] if i % 3 else [r1], 10.0 + (i % 7))
+                yield clock.transfer([r2], 5.0 + (i % 5))
+            clock.process(prog())
+
+        for i in range(1200):
+            clock.schedule(i * 0.001, lambda i=i: wave(i))
+        clock.run()
+        clock.assert_no_stranded_flows()
+        done[engine] = (clock.now, clock.flows_settled, r1.busy_bytes, r2.busy_bytes)
+    assert done["vector"] == done["scalar"]
+
+
+def test_deferred_solve_is_invisible_between_runs():
+    """Reads between transfer() and run() see consistent flow state.
+
+    The vector engine defers its rate solve until the instant completes;
+    queue depths and the stranded-flow invariant must not depend on it.
+    """
+    probes = {}
+    for engine in ENGINES:
+        clock = SimClock(engine=engine)
+        r = Resource("r", 100.0)
+        clock.transfer([r], 400.0)
+        clock.transfer([r], 200.0)
+        q0 = r.queued_bytes(clock.now)
+        clock.assert_no_stranded_flows()
+        clock.run(until=1.0)
+        q1 = r.queued_bytes(clock.now)
+        clock.transfer([r], 100.0)     # new flow mid-run, again pre-flush
+        q2 = r.queued_bytes(clock.now)
+        clock.run()
+        probes[engine] = (q0, q1, q2, clock.now, r.busy_bytes)
+    assert probes["vector"] == probes["scalar"]
+    assert probes["vector"][0] == 600.0
+
+
+def test_engine_env_override(monkeypatch):
+    monkeypatch.setenv("HOARD_SIM_ENGINE", "scalar")
+    assert SimClock().engine == "scalar"
+    monkeypatch.delenv("HOARD_SIM_ENGINE")
+    assert SimClock().engine == "vector"
+    with pytest.raises(ValueError):
+        SimClock(engine="warp")
+
+
+def test_duplicate_resource_path_rejected():
+    clock = SimClock()
+    r = Resource("r", 100.0)
+    with pytest.raises(ValueError, match="duplicate resource"):
+        clock.transfer([r, r], 100.0)

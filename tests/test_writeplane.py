@@ -315,22 +315,22 @@ def test_statfs_and_ls_report_unflushed_bytes(tmp_path):
     clock, topo, store, cache = _cluster(root=str(tmp_path), replication=2)
     _admit_materialized(topo, cache)
     fs = _fs(clock, topo, store, cache)
-    base_free = fs.statfs()["free_bytes"]
+    base_free = fs.statfs().free_bytes
     fd = fs.open("/hoard/ds/shard-000000.bin", flags="w")
     fs.pwrite(fd, b"x" * 1000, 0)
     st = fs.statfs()
-    assert st["write_buffer_bytes"] == 1000
-    assert st["free_bytes"] == base_free - 1000   # buffers occupy real NVMe
-    ls = {d["dataset"]: d for d in cache.ls()}
-    assert ls["ds"]["pending_write_bytes"] == 1000
+    assert st.write_buffer_bytes == 1000
+    assert st.free_bytes == base_free - 1000   # buffers occupy real NVMe
+    ls = {d.dataset: d for d in cache.ls()}
+    assert ls["ds"].pending_write_bytes == 1000
 
     fs.fsync(fd)
     clock.run()
     st = fs.statfs()
-    assert st["write_buffer_bytes"] == 0
-    ls = {d["dataset"]: d for d in cache.ls()}
+    assert st.write_buffer_bytes == 0
+    ls = {d.dataset: d for d in cache.ls()}
     # write-back quiescence may have flushed already; dirty never negative
-    assert ls["ds"]["dirty_bytes"] >= 0
+    assert ls["ds"].dirty_bytes >= 0
     fs.close(fd)
 
 
