@@ -1,0 +1,156 @@
+"""Model-zoo sweep: hoard-vs-remote speedup as a function of arithmetic intensity.
+
+The capstone of the compute plane (ISSUE 10).  The paper's headline speedup
+is an *AlexNet* number — a model whose step time is short enough that the
+remote data path starves the GPU.  Pricing the same cluster with the
+roofline calibration table shows how that argument generalises:
+
+* **qwen1.5-0.5b @ 64x4** — small LM, short steps: IO-bound, Hoard's cache
+  buys at least the paper's headline ratio (``MIN_SPEEDUP_SMALL_LM``);
+* **internvl2-2b @ 128x4** — mid-size VLM: partially IO-bound, a clearly
+  intermediate speedup;
+* **hymba-1.5b @ 4x4** — heavy hybrid on a small mesh, 4.6 s steps: the GPU
+  is the bottleneck in *both* arms, so caching buys ~nothing (<= 1.1x);
+* **alexnet-const** — the ``ConstantCompute`` reference arm in the same
+  geometry, tying the sweep back to the paper's calibration.
+
+Gates (any violation fails the benchmark, and therefore CI):
+
+1. speedup ordering matches intensity ordering: qwen > internvl2 > hymba,
+   and table step times order the opposite way (qwen < internvl2 < hymba);
+2. the IO-bound floor and the compute-bound ceiling above;
+3. table determinism — ``generate_table()`` twice in-process, byte-compared
+   to the committed ``bench-artifacts/calibration_table.json``, plus
+   ``python -m repro.roofline.table --digest`` under PYTHONHASHSEED=0 and 1.
+
+All speedups are deterministic simulated ratios — gated via baseline.json.
+
+Run: ``PYTHONPATH=src python -m benchmarks.run --only modelzoo``
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+import subprocess
+import sys
+
+from repro.core import PAPER, ConstantCompute, RooflineCompute, ScenarioConfig, run_scenario
+from repro.roofline.table import DEFAULT_TABLE_PATH, generate_table, table_digest, table_json
+
+from .common import Row, record_metric
+
+# 14.7 GB dataset (131072 paper-sized items), 256-item batches, tiny page
+# cache (mdr=0.05) so the remote arm really pays the NFS path every epoch
+CAL = dataclasses.replace(
+    PAPER,
+    dataset_items=131072,
+    dataset_bytes=131072 * PAPER.item_bytes,
+    batch_items=256,
+)
+EPOCHS = 3
+N_JOBS = 2
+MDR = 0.05
+
+#: (short name, arch, mesh) — meshes chosen so the roofline cell is the
+#: realistic deployment point for each size class
+ARMS = (
+    ("qwen", "qwen1.5-0.5b", "64x4"),
+    ("internvl2", "internvl2-2b", "128x4"),
+    ("hymba", "hymba-1.5b", "4x4"),
+)
+MIN_SPEEDUP_SMALL_LM = 2.05       # the paper's headline AlexNet ratio
+MAX_SPEEDUP_COMPUTE_BOUND = 1.1
+
+
+def _speedup(compute):
+    """(speedup, steady hoard epoch, steady remote epoch) for one arm."""
+    kw = dict(epochs=EPOCHS, n_jobs=N_JOBS, cal=CAL, mdr=MDR, compute=compute)
+    hoard = run_scenario(ScenarioConfig(backend="hoard", fill="prepopulated", **kw))
+    rem = run_scenario(ScenarioConfig(backend="rem", **kw))
+    steady_h = sum(hoard.mean_epoch_times[1:]) / (EPOCHS - 1)
+    steady_r = sum(rem.mean_epoch_times[1:]) / (EPOCHS - 1)
+    return steady_r / steady_h, steady_h, steady_r
+
+
+def _check_table_determinism() -> list[str]:
+    """Gate 3: regeneration is byte-identical, committed, and hash-seed-free."""
+    fresh = generate_table()
+    again = generate_table()
+    if table_json(fresh) != table_json(again):
+        raise RuntimeError("calibration table not deterministic across regenerations")
+    committed = DEFAULT_TABLE_PATH.read_text() if DEFAULT_TABLE_PATH.exists() else ""
+    if table_json(fresh) != committed:
+        raise RuntimeError(
+            f"{DEFAULT_TABLE_PATH} is stale — regenerate with "
+            f"`python -m repro.roofline.table --write`"
+        )
+    digest = table_digest(fresh)
+    for seed in ("0", "1"):
+        out = subprocess.run(
+            [sys.executable, "-m", "repro.roofline.table", "--digest"],
+            env={**os.environ, "PYTHONHASHSEED": seed},
+            capture_output=True, text=True, check=True,
+        )
+        got = out.stdout.strip().splitlines()[-1]
+        if got != digest:
+            raise RuntimeError(
+                f"table digest varies with PYTHONHASHSEED={seed}: {got} != {digest}"
+            )
+    return [f"table determinism: {len(fresh['cells'])} cells, sha256 {digest[:16]}..., "
+            f"byte-identical under PYTHONHASHSEED 0/1"]
+
+
+def modelzoo_rows():
+    rows: list[Row] = []
+    lines = [
+        "Model zoo — hoard/remote speedup vs arithmetic intensity "
+        f"({CAL.dataset_bytes/1e9:.1f} GB dataset, {N_JOBS} jobs, mdr={MDR}, "
+        f"steady epochs of {EPOCHS})"
+    ]
+    lines += _check_table_determinism()
+
+    speedups: dict[str, float] = {}
+    steps: dict[str, float] = {}
+    for short, arch, mesh in ARMS:
+        rc = RooflineCompute.from_roofline(arch, "train_4k", mesh)
+        s, steady_h, steady_r = _speedup(rc)
+        speedups[short], steps[short] = s, rc.step_s
+        rows.append(Row(f"modelzoo/{short}_hoard_epoch", steady_h * 1e6, f"{s:.2f}x"))
+        record_metric("modelzoo", f"speedup_{short}", s, better="higher")
+        record_metric("modelzoo", f"{short}_hoard_epoch_s", steady_h, better="lower")
+        lines.append(
+            f"  {arch:14s} @ {mesh:6s} step={rc.step_s:8.4f} s ({rc.bottleneck}-bound "
+            f"cell)  hoard={steady_h:8.2f} s  rem={steady_r:8.2f} s  -> {s:.3f}x"
+        )
+
+    s, steady_h, steady_r = _speedup(ConstantCompute(CAL))
+    rows.append(Row("modelzoo/alexnet_hoard_epoch", steady_h * 1e6, f"{s:.2f}x"))
+    record_metric("modelzoo", "speedup_alexnet_const", s, better="higher")
+    lines.append(
+        f"  {'alexnet-const':14s} @ {'paper':6s} step={CAL.compute_time_per_step():8.4f} s "
+        f"(calibrated)       hoard={steady_h:8.2f} s  rem={steady_r:8.2f} s  -> {s:.3f}x"
+    )
+
+    # gate 1: speedup strictly follows intensity, both ways around
+    if not speedups["qwen"] > speedups["internvl2"] > speedups["hymba"]:
+        raise RuntimeError(f"speedup ordering violates intensity ordering: {speedups}")
+    if not steps["qwen"] < steps["internvl2"] < steps["hymba"]:
+        raise RuntimeError(f"table step times out of order: {steps}")
+    # gate 2: the ends of the spectrum
+    if speedups["qwen"] < MIN_SPEEDUP_SMALL_LM:
+        raise RuntimeError(
+            f"IO-bound small LM speedup {speedups['qwen']:.3f} below the paper's "
+            f"headline floor {MIN_SPEEDUP_SMALL_LM}"
+        )
+    if speedups["hymba"] > MAX_SPEEDUP_COMPUTE_BOUND:
+        raise RuntimeError(
+            f"compute-bound arm speedup {speedups['hymba']:.3f} exceeds "
+            f"{MAX_SPEEDUP_COMPUTE_BOUND} — caching should buy ~nothing there"
+        )
+    lines.append(
+        f"  gates: {speedups['qwen']:.2f}x > {speedups['internvl2']:.2f}x > "
+        f"{speedups['hymba']:.2f}x; small-LM floor {MIN_SPEEDUP_SMALL_LM}, "
+        f"compute-bound cap {MAX_SPEEDUP_COMPUTE_BOUND}"
+    )
+    return rows, lines

@@ -91,6 +91,7 @@ def main() -> None:
     from .common import collected_metrics
     from .fsbench import fsbench_rows
     from .ingest_demand import ingest_rows
+    from .modelzoo import modelzoo_rows
     from .multitenant import multitenant_rows
     from .partialcache import partialcache_rows
     from .rebalance import rebalance_rows
@@ -119,6 +120,7 @@ def main() -> None:
         ("partialcache", partialcache_rows),
         ("telemetry", telemetry_rows),
         ("simscale", simscale_rows),
+        ("modelzoo", modelzoo_rows),
     ]
     if args.quick:
         benches = [
@@ -126,7 +128,7 @@ def main() -> None:
             if b[0] in (
                 "table3", "table5", "headline", "roofline", "ingest",
                 "fsbench", "rebalance", "writeburst", "partialcache",
-                "telemetry", "simscale",
+                "telemetry", "simscale", "modelzoo",
             )
         ]
     if args.only:

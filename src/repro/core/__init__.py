@@ -23,7 +23,13 @@ from .cache import (
     DatasetStat,
     EvictionPolicy,
 )
-from .calibration import PAPER, WorkloadCalibration
+from .calibration import (
+    PAPER,
+    ComputeModel,
+    ConstantCompute,
+    RooflineCompute,
+    WorkloadCalibration,
+)
 from .cluster import ScenarioConfig, ScenarioResult, build_cluster, run_scenario
 from .loader import (
     HoardBackend,
@@ -81,7 +87,8 @@ from .writeplane import (
 __all__ = [
     "AllOf", "CacheEntry", "CacheEvent", "CacheFullError", "CacheManager",
     "CacheState", "ChunkCodec", "ChunkCorruption", "ChunkMove", "ClusterMetrics",
-    "ClusterScheduler", "DatasetSpec", "DatasetStat", "Event", "EvictionPolicy",
+    "ClusterScheduler", "ComputeModel", "ConstantCompute",
+    "DatasetSpec", "DatasetStat", "Event", "EvictionPolicy",
     "FillTracker",
     "FlowTag",
     "HoardBackend", "HoardLoader", "JobMetrics", "JobRecord", "JobResult",
@@ -90,6 +97,7 @@ __all__ = [
     "Placement", "PlacementEngine", "PrefetchScheduler", "ReadScheduler",
     "RebalanceError",
     "RebalancePlan", "Rebalancer", "RemoteBackend", "Resource", "ResourceSampler",
+    "RooflineCompute",
     "STALL_CLASSES", "ScenarioConfig", "ScenarioResult",
     "SimClock", "StripeDataPlane", "StripeError", "StripeManifest", "StripeStore",
     "Telemetry", "Topology", "TopologyConfig", "Tracer", "TrainingJob",

@@ -51,7 +51,10 @@ data from Table 2 / Section 4.5 and lives in ``topology.TopologyConfig``.
 
 from __future__ import annotations
 
-from dataclasses import dataclass
+import json
+from dataclasses import dataclass, field
+from pathlib import Path
+from typing import ClassVar, Optional, Protocol, Union, runtime_checkable
 
 MB = 1e6
 GB = 1e9
@@ -98,7 +101,139 @@ class WorkloadCalibration:
         return self.gpu_bw / self.item_bytes
 
     def compute_time_per_step(self) -> float:
-        return self.batch_items / self.gpu_fps
+        """GPU seconds per step — thin delegate to :class:`ConstantCompute`.
+
+        Kept (without deprecation churn) for the many internal callers; the
+        compute plane's :class:`ComputeModel` protocol is the extensible
+        interface.
+        """
+        return ConstantCompute(self).step_time_s(self.batch_items)
 
 
 PAPER = WorkloadCalibration()
+
+
+# ---------------------------------------------------------------------------
+# The compute plane (ISSUE 10): one interface, two implementations.
+#
+# ``TrainingJob`` used to call ``cal.compute_time_per_step()`` directly, so
+# every simulated job was secretly the paper's AlexNet.  The plane makes the
+# GPU-time model a first-class, swappable object:
+#
+# * ``ConstantCompute``  — the AlexNet calibration, bit-identical default;
+# * ``RooflineCompute``  — per-(arch x shape x mesh) step time from the
+#   committed roofline calibration table (``max(compute, memory,
+#   collective)`` over the pallas kernel cost estimates — see
+#   ``repro.roofline.table``).
+# ---------------------------------------------------------------------------
+
+@runtime_checkable
+class ComputeModel(Protocol):
+    """Anything that prices accelerator time for one training step."""
+
+    name: str
+
+    def step_time_s(self, batch_items: int) -> float:
+        """GPU-busy seconds to consume one batch of ``batch_items`` items."""
+        ...
+
+
+@dataclass(frozen=True)
+class ConstantCompute:
+    """The paper's calibrated constant: AlexNet fwd+bwd at ``gpu_bw``.
+
+    ``step_time_s(cal.batch_items)`` computes exactly the float expression
+    of the old ``WorkloadCalibration.compute_time_per_step()`` — every
+    pre-compute-plane scenario is bit-identical under this default.
+    """
+
+    cal: WorkloadCalibration = field(default_factory=lambda: PAPER)
+    name: ClassVar[str] = "constant"
+
+    def step_time_s(self, batch_items: int) -> float:
+        return batch_items / self.cal.gpu_fps
+
+
+def _default_table_path() -> Path:
+    # src/repro/core/calibration.py -> repo root / bench-artifacts
+    return Path(__file__).resolve().parents[3] / "bench-artifacts" / "calibration_table.json"
+
+
+@dataclass(frozen=True)
+class RooflineCompute:
+    """Per-model GPU time from one roofline calibration-table cell.
+
+    The cell's ``step_time_s`` prices a full global batch of
+    ``items_per_step`` items (the shape's ``global_batch``); other batch
+    sizes scale linearly — the roofline terms are all per-token.
+
+    Construct via :meth:`from_roofline`; reading the committed JSON table
+    needs no jax (the heavy imports only happen when the table is absent and
+    must be regenerated).
+    """
+
+    arch: str
+    shape: str
+    mesh: str
+    step_s: float
+    items_per_step: int
+    bottleneck: str = ""
+    name: ClassVar[str] = "roofline"
+
+    def step_time_s(self, batch_items: int) -> float:
+        return self.step_s * (batch_items / self.items_per_step)
+
+    @classmethod
+    def from_roofline(
+        cls,
+        arch: str,
+        shape: str = "train_4k",
+        mesh: str = "64x4",
+        *,
+        table: Union[None, str, Path, dict] = None,
+    ) -> "RooflineCompute":
+        """Load one (arch x shape x mesh) cell from the calibration table.
+
+        ``table`` is the committed ``bench-artifacts/calibration_table.json``
+        by default; pass a path or an already-loaded table dict to override.
+        A missing default table is regenerated in-process (requires jax).
+        """
+        if isinstance(table, dict):
+            data = table
+        else:
+            path = Path(table) if table is not None else _default_table_path()
+            if path.exists():
+                data = json.loads(path.read_text())
+            elif table is None:
+                from ..roofline.table import generate_table  # lazy: jax-backed
+
+                data = generate_table()
+            else:
+                raise FileNotFoundError(f"calibration table not found: {path}")
+        key = f"{arch}|{shape}|{mesh}"
+        cells = data.get("cells", {})
+        if key not in cells:
+            sample = ", ".join(sorted(cells)[:6])
+            raise KeyError(
+                f"no calibration cell {key!r} (have {len(cells)}: {sample}, ...); "
+                f"regenerate with `python -m repro.roofline.table --write`"
+            )
+        cell = cells[key]
+        return cls(
+            arch=arch,
+            shape=shape,
+            mesh=mesh,
+            step_s=float(cell["step_time_s"]),
+            items_per_step=int(cell["items_per_step"]),
+            bottleneck=str(cell.get("bottleneck", "")),
+        )
+
+
+def validate_compute(compute: Optional[ComputeModel], where: str) -> None:
+    """Construction-time check for typed ``compute=`` fields (PR-9 style)."""
+    if compute is not None and not callable(getattr(compute, "step_time_s", None)):
+        raise TypeError(
+            f"{where} must implement ComputeModel.step_time_s(batch_items) "
+            f"(e.g. ConstantCompute / RooflineCompute.from_roofline(...)), "
+            f"got {type(compute).__name__}"
+        )

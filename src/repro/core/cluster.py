@@ -18,11 +18,11 @@ field with a default); the legacy flat-kwargs call form
 from __future__ import annotations
 
 import warnings
-from dataclasses import dataclass, field
+from dataclasses import dataclass, field, replace
 from typing import Optional, Sequence
 
 from .cache import CacheManager, DatasetSpec, EvictionPolicy
-from .calibration import PAPER, WorkloadCalibration
+from .calibration import PAPER, ComputeModel, WorkloadCalibration, validate_compute
 from .loader import JobResult
 from .metrics import ClusterMetrics
 from .placement import PlacementEngine
@@ -99,6 +99,10 @@ class ScenarioConfig:
     items_per_chunk: Optional[int] = None
     telemetry: bool = False                    # attach a Telemetry hub
     engine: Optional[str] = None               # simclock flow engine ("vector")
+    # compute plane (ISSUE 10): GPU-time model applied to every job.  None
+    # keeps the paper's AlexNet constant (bit-identical baselines); pass
+    # RooflineCompute.from_roofline(arch, shape, mesh) for per-model time.
+    compute: Optional[ComputeModel] = None
 
     def __post_init__(self):
         if self.fill not in ("afm", "prepopulated", "ondemand"):
@@ -107,6 +111,7 @@ class ScenarioConfig:
             # prefetch books a whole-dataset transfer + mark_filled of its
             # own; combining it with another fill model double-streams
             raise ValueError(f"prefetch=True conflicts with fill={self.fill!r}")
+        validate_compute(self.compute, "ScenarioConfig.compute")
 
 
 def build_cluster(
@@ -214,8 +219,6 @@ def _run_config(cfg: ScenarioConfig) -> ScenarioResult:
     if cfg.remote_bw_scale != 1.0:
         # Figure 5: the tc tool throttles the NFS NIC; per-stream service and
         # the AFM fill path (remote-fed) scale with it, local paths do not
-        from dataclasses import replace
-
         cal = replace(
             cal,
             rem_miss_bw=cal.rem_miss_bw * cfg.remote_bw_scale,
@@ -293,6 +296,7 @@ def _run_config(cfg: ScenarioConfig) -> ScenarioResult:
                 cal=cal,
                 cache_fraction=cache_fraction,
                 allow_partial=allow_partial,
+                compute=cfg.compute,
             )
         )
     wl = scheduler.run(jobs)

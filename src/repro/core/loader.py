@@ -18,13 +18,14 @@ input pipelines behave and why throughput is ``max(io, compute)``-bound.
 
 from __future__ import annotations
 
+from collections import deque
 from dataclasses import dataclass, field
 from typing import Iterator, Optional
 
 import numpy as np
 
 from .cache import CacheManager, CacheState
-from .calibration import WorkloadCalibration
+from .calibration import ComputeModel, ConstantCompute, WorkloadCalibration, validate_compute
 from .metrics import JobMetrics
 from .simclock import Event, Resource, SimClock
 from .stripestore import StripeError
@@ -694,11 +695,16 @@ class TrainingJob:
         *,
         metrics: Optional[JobMetrics] = None,
         prefetch_depth: int = 16,
+        compute: Optional[ComputeModel] = None,
     ):
+        validate_compute(compute, "TrainingJob(compute=...)")
         self.job_id = job_id
         self.clock = clock
         self.loader = loader
         self.cal = cal
+        # the compute plane: GPU time per step.  None keeps the paper's
+        # AlexNet constant (bit-identical to the pre-plane simulator).
+        self.compute: ComputeModel = compute if compute is not None else ConstantCompute(cal)
         self.metrics = metrics
         self.prefetch_depth = max(1, int(prefetch_depth))
         self.result = JobResult(job_id)
@@ -709,7 +715,10 @@ class TrainingJob:
     def _run(self):
         clock = self.clock
         backend = self.loader.backend
-        compute_s = self.cal.compute_time_per_step()
+        # price the accelerator via the compute plane; the step consumes the
+        # loader's calibrated batch (cal.batch_items — the per-job GPU batch,
+        # independent of any loader batching override)
+        compute_s = self.compute.step_time_s(self.cal.batch_items)
         tel = clock.telemetry
         tracer = tel.tracer if tel is not None else None
         breakdown = self.result.stall_breakdown
@@ -745,8 +754,6 @@ class TrainingJob:
             # snapshot the batch's dominant service class now: any wait on
             # this event is attributed to the stage that served the batch
             return epoch, io, getattr(backend, "last_io_class", "disk-queue")
-
-        from collections import deque
 
         pending: deque = deque()
 

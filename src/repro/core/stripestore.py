@@ -22,6 +22,7 @@ from __future__ import annotations
 
 import json
 import os
+import shutil
 import zlib
 from dataclasses import dataclass, field
 from typing import Callable, Optional, Sequence
@@ -1281,8 +1282,6 @@ class StripeStore:
                     if os.path.exists(path):
                         os.remove(path)
         if man.materialized and self.root:
-            import shutil
-
             for node_id in touched_nodes:
                 d = os.path.join(self.root, f"node{node_id}", dataset_id)
                 shutil.rmtree(d, ignore_errors=True)

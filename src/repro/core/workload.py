@@ -36,7 +36,7 @@ from dataclasses import dataclass, field, replace
 from typing import Optional, Sequence
 
 from .cache import CacheEvent, CacheFullError, CacheManager, CacheState
-from .calibration import PAPER, WorkloadCalibration
+from .calibration import PAPER, ComputeModel, WorkloadCalibration, validate_compute
 from .loader import (
     HoardBackend,
     HoardLoader,
@@ -93,6 +93,10 @@ class WorkloadJob:
     # dataset; True/False overrides (run_scenario pins job0 as the driver)
     fill_driver: Optional[bool] = None
     cal: Optional[WorkloadCalibration] = None  # None -> derived from the dataset
+    # ---- compute plane (ISSUE 10): GPU-time model for this job's steps.
+    # None keeps the paper's AlexNet constant (ConstantCompute); pass
+    # RooflineCompute.from_roofline(arch, shape, mesh) for per-model time.
+    compute: Optional[ComputeModel] = None
     # ---- checkpoint bursts (ISSUE 6): every compute node of the job
     # periodically writes ckpt_bytes through the write plane and fsyncs,
     # so checkpoint traffic contends with foreground ingest on the same
@@ -131,6 +135,7 @@ class WorkloadJob:
             raise ValueError(
                 f"cache_fraction must be in (0, 1], got {self.cache_fraction}"
             )
+        validate_compute(self.compute, "WorkloadJob.compute")
 
 
 @dataclass
@@ -425,7 +430,9 @@ class ClusterScheduler:
             )
         seed = spec.seed if spec.seed is not None else stable_seed(spec.job_id)
         loader = HoardLoader(be, cal, epochs=spec.epochs, seed=seed)
-        job = TrainingJob(spec.job_id, clock, loader, cal, metrics=jm)
+        job = TrainingJob(
+            spec.job_id, clock, loader, cal, metrics=jm, compute=spec.compute
+        )
         if scheduler is not None:
             # clairvoyant: this job cold-admitted the dataset, so its epoch-0
             # permutation defines the fill's first-touch order (NoPFS)

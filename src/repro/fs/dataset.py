@@ -85,6 +85,31 @@ class FileDataset:
         self.last_io_class = self.fs.last_io_class
         return ev
 
+    def read_item_bytes(self, item_ids: np.ndarray) -> list:
+        """Materialized-store path: one :class:`ReadResult` per item.
+
+        The compute-plane integration hook (ISSUE 10): issues a positional
+        read per item through the same handle table / reader pins as
+        :meth:`batch_io`, but returns the per-item results so a *real*
+        training step can consume the actual payload bytes — each result's
+        ``.data`` is populated once the clock has run the transfers (the
+        store must be materialized; see ``StripeStore(root=...)``).
+        """
+        item_ids = np.asarray(item_ids)
+        file_idx = item_ids // self.items_per_file
+        for i in np.unique(file_idx):
+            if self._fd_table[i] < 0:
+                self._fd_table[i] = self.fs.open(
+                    self.fs.meta.file_path(self.dataset_id, int(i))
+                )
+        results = []
+        for item, fi in zip(item_ids, file_idx):
+            offset = int(item % self.items_per_file) * self.item_bytes
+            results.append(
+                self.fs.pread(int(self._fd_table[fi]), self.item_bytes, offset)
+            )
+        return results
+
     # -------------------------------------------------------------- teardown
     @property
     def open_files(self) -> int:

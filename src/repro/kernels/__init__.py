@@ -7,6 +7,13 @@ sweeps in ``tests/test_kernels.py``.
 
 from . import pallas_compat  # noqa: F401  (must precede kernel imports)
 from . import ops, ref
+from .cost import (
+    KernelCost,
+    flash_attention_cost,
+    mlstm_scan_cost,
+    ssd_scan_cost,
+    swiglu_cost,
+)
 from .decode_attention import decode_attention
 from .flash_attention import flash_attention
 from .mlstm_scan import mlstm_scan
@@ -15,6 +22,8 @@ from .ssd_scan import ssd_scan_kernel
 from .swiglu import swiglu_mlp
 
 __all__ = [
-    "decode_attention", "flash_attention", "mlstm_scan", "ops", "ref",
-    "rmsnorm", "ssd_scan_kernel", "swiglu_mlp",
+    "KernelCost", "decode_attention", "flash_attention",
+    "flash_attention_cost", "mlstm_scan", "mlstm_scan_cost", "ops", "ref",
+    "rmsnorm", "ssd_scan_kernel", "ssd_scan_cost", "swiglu_cost",
+    "swiglu_mlp",
 ]

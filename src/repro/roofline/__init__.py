@@ -2,8 +2,21 @@
 
 from .analysis import HBM_BW, ICI_BW, PEAK_FLOPS, RooflineReport, model_flops
 from .hlo_walk import analyze, multipliers, parse_computations
+from .table import (
+    DEFAULT_TABLE_PATH,
+    TABLE_MESHES,
+    analytic_cell,
+    cell_key,
+    generate_table,
+    mesh_dims,
+    table_digest,
+    table_json,
+    write_table,
+)
 
 __all__ = [
-    "HBM_BW", "ICI_BW", "PEAK_FLOPS", "RooflineReport", "analyze",
-    "model_flops", "multipliers", "parse_computations",
+    "DEFAULT_TABLE_PATH", "HBM_BW", "ICI_BW", "PEAK_FLOPS", "RooflineReport",
+    "TABLE_MESHES", "analytic_cell", "analyze", "cell_key", "generate_table",
+    "mesh_dims", "model_flops", "multipliers", "parse_computations",
+    "table_digest", "table_json", "write_table",
 ]

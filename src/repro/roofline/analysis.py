@@ -59,7 +59,9 @@ def _split_computations(hlo: str) -> dict[str, list[str]]:
     current = None
     for line in hlo.splitlines():
         stripped = line.strip()
-        header = re.match(r"(?:ENTRY\s+)?%?([\w\.\-]+)\s*\([^)]*\)\s*->.*{", stripped)
+        # args may nest tuple types with parens, so match greedily up to the
+        # `) -> ... {` tail (same convention as hlo_walk.parse_computations)
+        header = re.match(r"(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\)\s*->.*{", stripped)
         if header and not stripped.startswith("ROOT"):
             current = header.group(1)
             comps[current] = []

@@ -12,13 +12,22 @@ from .optimizer import (
     opt_state_specs,
     zero_spec_for,
 )
-from .step import init_train_state, make_eval_step, make_train_step
+from .step import (
+    compiled_step_costs,
+    compiled_step_flops,
+    init_train_state,
+    make_eval_step,
+    make_train_step,
+    token_batch_from_bytes,
+)
 
 __all__ = [
     "AdamWConfig", "CheckpointManager", "HoardCheckpointManager",
     "PreemptionGuard", "RestartPolicy",
-    "SamplerState", "StragglerMonitor", "adamw_update", "compress_int8",
+    "SamplerState", "StragglerMonitor", "adamw_update", "compiled_step_costs",
+    "compiled_step_flops",
+    "compress_int8",
     "config_digest", "decompress_int8", "init_opt_state", "init_train_state",
     "make_eval_step", "make_train_step", "opt_state_specs",
-    "run_with_restarts", "zero_spec_for",
+    "run_with_restarts", "token_batch_from_bytes", "zero_spec_for",
 ]

@@ -1,0 +1,242 @@
+"""Compute plane (ISSUE 10): ComputeModel protocol, threading, integration.
+
+Three layers of assurance:
+
+* **bit-identity** — the default ``ConstantCompute`` computes the exact
+  float expression of the old ``WorkloadCalibration.compute_time_per_step``,
+  and a scenario run with ``compute=None`` equals one with an explicit
+  ``ConstantCompute`` field for field;
+* **threading** — ``compute=`` flows ScenarioConfig -> WorkloadJob ->
+  TrainingJob, is validated at construction time at every layer, and a
+  ``RooflineCompute`` cell visibly re-prices the GPU time of a run;
+* **integration** — a *real* (tiny-shape) training step runs on bytes
+  served through ``FileDataset.read_item_bytes`` from a materialized stripe
+  store, and the compiled step's XLA FLOP count agrees with the analytic
+  roofline cell within a stated tolerance.
+"""
+
+import dataclasses
+import json
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    PAPER,
+    CacheManager,
+    ComputeModel,
+    ConstantCompute,
+    DatasetSpec,
+    RooflineCompute,
+    ScenarioConfig,
+    SimClock,
+    StripeStore,
+    Topology,
+    TopologyConfig,
+    WorkloadJob,
+    run_scenario,
+)
+from repro.core.calibration import validate_compute
+from repro.roofline.table import DEFAULT_TABLE_PATH
+
+# small workload: 1024 items x 1 KB (scenario tests reuse the test_fs geometry)
+CAL = dataclasses.replace(
+    PAPER, dataset_bytes=1024 * 1024.0, dataset_items=1024, batch_items=128
+)
+
+
+# ------------------------------------------------------------- ConstantCompute
+
+def test_constant_compute_bit_identical_to_legacy():
+    for cal in (PAPER, CAL, dataclasses.replace(PAPER, batch_items=512)):
+        cc = ConstantCompute(cal)
+        # exact same float expression, not approx: the old method is now a
+        # thin delegate and every pre-plane scenario must stay bit-identical
+        assert cc.step_time_s(cal.batch_items) == cal.compute_time_per_step()
+        assert cc.step_time_s(2 * cal.batch_items) == 2 * cc.step_time_s(cal.batch_items)
+    assert ConstantCompute().cal is PAPER
+    assert ConstantCompute.name == "constant"
+    assert isinstance(ConstantCompute(), ComputeModel)
+
+
+# ------------------------------------------------------------- RooflineCompute
+
+def test_from_roofline_reads_committed_table():
+    rc = RooflineCompute.from_roofline("qwen1.5-0.5b", "train_4k", "64x4")
+    assert rc.name == "roofline"
+    assert rc.items_per_step == 256            # train_4k global batch
+    assert rc.step_s > 0
+    assert rc.bottleneck in ("compute", "memory", "collective")
+    # linear scaling in batch size (all roofline terms are per-token)
+    assert rc.step_time_s(512) == pytest.approx(2 * rc.step_time_s(256))
+    assert isinstance(rc, ComputeModel)
+
+
+def test_from_roofline_table_overrides_and_errors(tmp_path):
+    data = json.loads(DEFAULT_TABLE_PATH.read_text())
+    via_dict = RooflineCompute.from_roofline("hymba-1.5b", "train_4k", "4x4", table=data)
+    p = tmp_path / "table.json"
+    p.write_text(json.dumps(data))
+    via_path = RooflineCompute.from_roofline("hymba-1.5b", "train_4k", "4x4", table=p)
+    assert via_dict == via_path
+    with pytest.raises(KeyError, match="no calibration cell"):
+        RooflineCompute.from_roofline("no-such-arch", table=data)
+    with pytest.raises(FileNotFoundError):
+        RooflineCompute.from_roofline("hymba-1.5b", table=tmp_path / "missing.json")
+
+
+def test_intensity_ordering_in_committed_table():
+    """The modelzoo premise: small LM steps fast, Hymba steps slow."""
+    small = RooflineCompute.from_roofline("qwen1.5-0.5b", "train_4k", "64x4")
+    big = RooflineCompute.from_roofline("hymba-1.5b", "train_4k", "4x4")
+    assert small.step_s < big.step_s
+
+
+# ------------------------------------------------------ construction validation
+
+def test_validate_compute_rejects_non_models():
+    validate_compute(None, "x")                     # None = default, fine
+    validate_compute(ConstantCompute(), "x")
+    with pytest.raises(TypeError, match="ScenarioConfig.compute"):
+        ScenarioConfig(backend="hoard", compute=3.14)
+    with pytest.raises(TypeError, match="WorkloadJob.compute"):
+        WorkloadJob("j0", "ds", compute="roofline")
+    # duck-typed models pass (Protocol, not inheritance)
+    class MyModel:
+        name = "mine"
+
+        def step_time_s(self, batch_items):
+            return 0.1
+
+    ScenarioConfig(backend="hoard", compute=MyModel())
+
+
+# ----------------------------------------------------------- scenario threading
+
+def _run(compute):
+    return run_scenario(ScenarioConfig(
+        backend="hoard", epochs=2, n_jobs=2, cal=CAL,
+        fill="prepopulated", mdr=0.5, compute=compute,
+    ))
+
+
+def test_default_scenario_bit_identical_to_explicit_constant():
+    base = _run(None)
+    explicit = _run(ConstantCompute(CAL))
+    for jb, je in zip(base.jobs, explicit.jobs):
+        assert jb.epoch_times == je.epoch_times
+        assert jb.stall_breakdown == je.stall_breakdown
+
+
+def test_roofline_compute_reprices_scenario_gpu_time():
+    steps = CAL.steps_per_epoch                      # 8
+    rc = RooflineCompute(
+        arch="toy", shape="s", mesh="1x1", step_s=2.0, items_per_step=CAL.batch_items
+    )
+    base = _run(None)
+    priced = _run(rc)
+    for jb, jp in zip(base.jobs, priced.jobs):
+        assert jp.epoch_times != jb.epoch_times
+        # the GPU now costs 2 s x 8 steps x 2 epochs of busy time per job
+        assert jp.stall_breakdown["compute"] == pytest.approx(2.0 * steps * 2)
+        assert all(e >= 2.0 * steps for e in jp.epoch_times)
+
+
+# --------------------------------------------------- real-step integration path
+
+def test_real_train_step_from_materialized_store(tmp_path):
+    """Drive one genuine train step from cache-served bytes; check the table.
+
+    The loop the calibration table abstracts, run for real once: admit a
+    materialized dataset of int32 token records, read items through
+    ``FileDataset.read_item_bytes`` (same handle table / reader pins as
+    training IO), decode them into a batch, execute the jitted train step,
+    and require the compiled step's FLOP count — walked trip-count-aware
+    from the optimized HLO by ``repro.roofline.hlo_walk`` — to agree with
+    the analytic roofline cell for the same (smoke arch, tiny shape, 1x1
+    mesh) within the stated tolerance: walked/analytic in [0.5, 1.5]
+    (measured ~0.8; the analytic cell adds flash-attention kernel FLOPs and
+    a remat re-forward the walker prices slightly differently).
+    """
+    jax = pytest.importorskip("jax")
+    from repro.configs import ARCHS
+    from repro.configs.base import ShapeConfig
+    from repro.fs import FileDataset, HoardFS, MetadataService
+    from repro.models import params as PM
+    from repro.models.registry import build_model
+    from repro.roofline.table import analytic_cell
+    from repro.train import (
+        compiled_step_costs,
+        init_train_state,
+        make_train_step,
+        token_batch_from_bytes,
+    )
+
+    seq_len, vocab, batch = 64, 512, 4
+    item_bytes = seq_len * 4                         # one int32 record per token
+    n_items, ipc = 1024, 64
+    cal = dataclasses.replace(
+        PAPER,
+        dataset_bytes=float(n_items * item_bytes),
+        dataset_items=n_items,
+        batch_items=batch,
+    )
+
+    clock = SimClock()
+    topo = Topology(TopologyConfig(nodes_per_rack=4), clock)
+    store = StripeStore(topo, root=str(tmp_path))
+    cache = CacheManager(topo, store, clock, items_per_chunk=ipc, fill_bw=cal.fill_bw)
+    cache.register(DatasetSpec("ds", "nfs://store/ds", n_items, item_bytes))
+    toks_per_chunk = ipc * seq_len
+    cache.admit(
+        "ds", topo.nodes[:4], materialize=True,
+        payload=lambda c: np.arange(
+            c * toks_per_chunk, (c + 1) * toks_per_chunk, dtype=np.int32
+        ).tobytes(),
+    )
+    cache.mark_filled("ds")
+    fs = HoardFS(clock, topo, cache, MetadataService(store), topo.nodes[0], cal=cal)
+    fs.meta.set_items_per_file("ds", 256)            # 4 shard files
+
+    ds = FileDataset(fs, "/hoard/ds", cal=cal)
+    results = ds.read_item_bytes(np.arange(batch))
+    clock.run()
+    payloads = [r.data for r in results]
+    assert all(p is not None and len(p) == item_bytes for p in payloads)
+    # bytes are the actual stored token ids, not placeholders
+    assert payloads[1] == np.arange(seq_len, 2 * seq_len, dtype=np.int32).tobytes()
+    ds.close()
+
+    tokens = np.frombuffer(b"".join(payloads), np.int32).reshape(batch, seq_len)
+    batch_arrays = token_batch_from_bytes(payloads, seq_len, vocab)
+    np.testing.assert_array_equal(np.asarray(batch_arrays["tokens"]), tokens % vocab)
+
+    cfg = ARCHS["qwen1.5-0.5b"].smoke()
+    model = build_model(cfg, model_axis=1)
+    params, opt_state = init_train_state(model, jax.random.PRNGKey(0))
+    new_params, _opt, metrics = jax.jit(make_train_step(model))(
+        params, opt_state, batch_arrays
+    )
+    assert np.isfinite(float(metrics["loss"]))       # the step really ran
+    leaves = jax.tree_util.tree_leaves(new_params)
+    assert all(np.all(np.isfinite(np.asarray(x))) for x in leaves)
+
+    costs = compiled_step_costs(model, batch_arrays)
+    assert costs["xla_flops"] > 0
+    # the scan-over-layers while body is multiplied by its trip count, so
+    # the walked figure can only meet or exceed raw cost_analysis
+    assert costs["flops"] >= costs["xla_flops"]
+    shape = ShapeConfig("tiny_train", seq_len, batch, "train")
+    cell = analytic_cell(cfg, shape, "1x1", n_params=PM.param_count(model.layout()))
+    ratio = costs["flops"] / cell.hlo_flops_per_chip
+    assert 0.5 <= ratio <= 1.5, (
+        f"walked step FLOPs {costs['flops']:.3e} vs analytic "
+        f"{cell.hlo_flops_per_chip:.3e} (ratio {ratio:.2f}) outside tolerance"
+    )
+
+
+def test_token_batch_from_bytes_rejects_short_payloads():
+    from repro.train import token_batch_from_bytes
+
+    with pytest.raises(ValueError, match="need 8"):
+        token_batch_from_bytes([b"\x00" * 8], seq_len=8, vocab=16)
